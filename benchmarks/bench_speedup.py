@@ -1,0 +1,48 @@
+"""Paper Fig. 4(a-b) + Table 3: speedup vs number of simulation workers.
+
+Measures wall-time of a full WU-UCT search on the tap game at fixed
+``num_simulations`` while sweeping the wave size (= in-flight workers W).
+
+Two speedup notions are reported:
+* ``rounds`` — master rounds T/W (the paper's idealized linear scaling; on a
+  pod the wave dimension shards over the data axis, so rounds ≈ wall-time),
+* ``wall`` — measured wall-time speedup on THIS host (single CPU core: waves
+  are SIMD-vectorized by XLA, not parallelized, so wall < rounds; the
+  dry-run proves the wave shards across 256/512 chips).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import make_config, make_searcher
+from repro.envs import make_tap_game
+
+from .common import time_fn, row
+
+
+def run(num_simulations: int = 64, waves=(1, 2, 4, 8, 16)) -> list[str]:
+    env = make_tap_game(grid_size=6, num_colors=4, goal_count=10, step_budget=20)
+    key = jax.random.PRNGKey(0)
+    state = env.init(key)
+    rows = []
+    base_t = None
+    for w in waves:
+        cfg = make_config(
+            "wu_uct", num_simulations=num_simulations, wave_size=w,
+            max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
+        )
+        search = make_searcher(env, cfg)
+        t = time_fn(search, state, key, warmup=1, iters=3)
+        if base_t is None:
+            base_t = t
+        rounds_speedup = w
+        wall_speedup = base_t / t
+        rows.append(
+            row(
+                f"speedup/wu_uct/W={w}",
+                t,
+                f"wall_x={wall_speedup:.2f};rounds_x={rounds_speedup}",
+            )
+        )
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Fig. 2(b-c): time-consumption breakdown of the system phases.
+
+Times the three wave phases separately — selection (+ incomplete updates),
+expansion+simulation (the parallel worker phase), and completion — to verify
+the paper's architectural premise: expansion+simulation dominate, so they
+are the two steps worth parallelizing, while the master-side bookkeeping and
+"communication" (here: slot gather/scatter) is negligible.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import make_config
+from repro.core.wu_uct import _phase1_select, _phase2_work, _phase3_settle
+from repro.core import tree as tree_lib
+from repro.envs import make_tap_game
+
+from .common import time_fn, row
+
+
+def run(wave_size: int = 16, num_simulations: int = 64) -> list[str]:
+    env = make_tap_game(grid_size=6, num_colors=4, goal_count=10, step_budget=20)
+    cfg = make_config(
+        "wu_uct", num_simulations=num_simulations, wave_size=wave_size,
+        max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
+    )
+    key = jax.random.PRNGKey(0)
+    state = env.init(key)
+    capacity = cfg.num_simulations + cfg.wave_size + 1
+    tree = tree_lib.init_tree(state, capacity, env.num_actions)
+
+    p1 = jax.jit(lambda t, k: _phase1_select(t, k, cfg))
+    tree1, slots, _ = p1(tree, key)
+    p2 = jax.jit(lambda t, s, k: _phase2_work(env, cfg, t, s, k))
+    out2 = p2(tree1, slots, key)
+    p3 = jax.jit(
+        lambda t, s, cs, re, dc, r: _phase3_settle(t, cfg, s, cs, re, dc, r)
+    )
+
+    t1 = time_fn(p1, tree, key)
+    t2 = time_fn(p2, tree1, slots, key)
+    t3 = time_fn(p3, tree1, slots, *out2)
+    total = t1 + t2 + t3
+    return [
+        row("breakdown/selection", t1, f"frac={t1 / total:.2f}"),
+        row("breakdown/expansion+simulation", t2, f"frac={t2 / total:.2f}"),
+        row("breakdown/completion", t3, f"frac={t3 / total:.2f}"),
+    ]

@@ -1,0 +1,71 @@
+"""Aggregate the dry-run JSON records into the EXPERIMENTS.md roofline table.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(d: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_row(r: dict) -> str:
+    if "skipped" in r:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | "
+            f"skipped: sub-quadratic-only cell | — |"
+        )
+    if "error" in r:
+        return (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERR | | | | "
+            f"{r['error'][:40]} | |"
+        )
+    rf = r["roofline"]
+    mem = r["memory"]
+    peak_gb = (mem.get("peak_bytes") or 0) / 2**30
+    return (
+        f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+        f"| {rf['compute_s']:.4g} | {rf['memory_s']:.4g} "
+        f"| {rf['collective_s']:.4g} | **{rf['dominant']}** "
+        f"| {rf['useful_flops_ratio']:.2f} | {peak_gb:.1f} |"
+    )
+
+
+def make_table(records: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+        "| dominant | 6ND/HLO | peak GiB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    records = sorted(
+        records, key=lambda r: (r.get("mesh", ""), r["arch"], order.get(r["shape"], 9))
+    )
+    return hdr + "\n".join(fmt_row(r) for r in records)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print(make_table(recs))
+    ok = sum(1 for r in recs if "roofline" in r)
+    skip = sum(1 for r in recs if "skipped" in r)
+    err = sum(1 for r in recs if "error" in r)
+    print(f"\n{ok} measured, {skip} skipped (per assignment), {err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness entry point.
+
+Each module maps to one paper artifact (see DESIGN.md §7):
+  bench_speedup         — Fig. 4(a-b) + Table 3 (speedup vs workers)
+  bench_worker_perf     — Fig. 4(c-d)          (performance vs workers)
+  bench_parallel_algos  — Table 1              (WU-UCT vs TreeP/LeafP/RootP)
+  bench_treep_variants  — Table 5 / App. E     (virtual pseudo-count TreeP)
+  bench_time_breakdown  — Fig. 2(b-c)          (phase time breakdown)
+  bench_regret          — beyond-paper exact-regret study (Sec. 4 claims)
+
+Roofline tables come from ``python -m benchmarks.roofline`` (reads the
+dry-run artifacts; see EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-list of module names")
+    ap.add_argument("--fast", action="store_true", help="reduced budgets")
+    args = ap.parse_args()
+
+    from . import (
+        bench_async_scaling,
+        bench_parallel_algos,
+        bench_regret,
+        bench_speedup,
+        bench_time_breakdown,
+        bench_treep_variants,
+        bench_worker_perf,
+    )
+
+    modules = {
+        "speedup": lambda: bench_speedup.run(
+            num_simulations=32 if args.fast else 64,
+            waves=(1, 4, 16) if args.fast else (1, 2, 4, 8, 16),
+        ),
+        "worker_perf": lambda: bench_worker_perf.run(
+            episodes=1 if args.fast else 3,
+            num_simulations=16 if args.fast else 32,
+        ),
+        "parallel_algos": lambda: bench_parallel_algos.run(
+            episodes=1 if args.fast else 3,
+            num_simulations=32 if args.fast else 64,
+        ),
+        "treep_variants": lambda: bench_treep_variants.run(
+            episodes=1 if args.fast else 3,
+            num_simulations=32 if args.fast else 64,
+        ),
+        "time_breakdown": lambda: bench_time_breakdown.run(),
+        "regret": lambda: bench_regret.run(trials=2 if args.fast else 5),
+        "async_scaling": lambda: bench_async_scaling.run(
+            num_simulations=32 if args.fast else 64,
+        ),
+    }
+    selected = args.only.split(",") if args.only else list(modules)
+
+    print("name,us_per_call,derived")
+    for name in selected:
+        t0 = time.time()
+        try:
+            for line in modules[name]():
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""User pass-rate prediction system — the paper's production deployment
+(App. C), reproduced end-to-end on generated tap-game levels.
+
+Pipeline (paper Fig. 7):
+  1. generate levels of varying difficulty;
+  2. run a 10-rollout WU-UCT bot (≈ average player) and a 100-rollout bot
+     (≈ skilled player) on each level, several gameplays each;
+  3. extract the paper's six features (pass-rate, mean/median step ratio,
+     per bot);
+  4. fit a linear regressor to (synthetic) human pass-rates;
+  5. report MAE (paper: 8.6% over 130 released levels).
+
+Human pass-rates are synthesized from a hidden difficulty model with noise —
+the system never sees the difficulty directly, only gameplay features.
+
+Run:  PYTHONPATH=src python examples/passrate_prediction.py [--levels 12]
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import make_config, play_episode
+from repro.envs import make_tap_game
+
+
+def gameplay_features(env, budget, n_games, seed, step_budget):
+    cfg = make_config(
+        "wu_uct", num_simulations=budget, wave_size=min(budget, 10),
+        max_depth=10, max_sim_steps=12, max_width=5, gamma=1.0,
+    )
+    passes, ratios = [], []
+    for g in range(n_games):
+        ret, moves, done = play_episode(
+            env, cfg, jax.random.PRNGKey(seed * 977 + g), max_moves=step_budget
+        )
+        solved = done and moves < step_budget or ret > 0.9
+        passes.append(float(solved))
+        ratios.append(moves / step_budget)
+    return [np.mean(passes), np.mean(ratios), np.median(ratios)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--levels", type=int, default=14)
+    ap.add_argument("--games", type=int, default=3)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    rows, human = [], []
+    for lv in range(args.levels):
+        # Difficulty knobs: more colors + higher goal = harder.
+        colors = int(rng.integers(3, 6))
+        goal = int(rng.integers(6, 14))
+        budget_steps = int(rng.integers(16, 26))
+        env = make_tap_game(
+            grid_size=6, num_colors=colors, goal_count=goal,
+            step_budget=budget_steps,
+        )
+        feats = gameplay_features(env, 10, args.games, lv * 2 + 1, budget_steps)
+        feats += gameplay_features(env, 100, args.games, lv * 2 + 2, budget_steps)
+        rows.append(feats)
+        # Hidden human model: logistic in difficulty + noise.
+        difficulty = 0.9 * colors + 0.45 * goal - 0.35 * budget_steps
+        p = 1.0 / (1.0 + np.exp(0.55 * difficulty))
+        human.append(np.clip(p + rng.normal(0, 0.05), 0, 1))
+        print(
+            f"level {lv:2d}: colors={colors} goal={goal:2d} steps={budget_steps} "
+            f"features={[f'{f:.2f}' for f in feats]} human={human[-1]:.2f}"
+        )
+
+    x = np.asarray(rows)
+    y = np.asarray(human)
+    n_train = max(2, int(0.7 * len(y)))
+    xd = np.concatenate([x, np.ones((len(y), 1))], axis=1)
+    # Ridge regression (the paper fits a linear regressor on 300 levels; at
+    # example scale regularization stands in for the larger training set).
+    lam = 0.05
+    a = xd[:n_train]
+    w = np.linalg.solve(
+        a.T @ a + lam * np.eye(a.shape[1]), a.T @ y[:n_train]
+    )
+    pred = np.clip(xd @ w, 0, 1)
+    mae_train = np.abs(pred[:n_train] - y[:n_train]).mean()
+    mae_test = np.abs(pred[n_train:] - y[n_train:]).mean()
+    print(
+        f"\npass-rate prediction MAE: train={100 * mae_train:.1f}% "
+        f"test={100 * mae_test:.1f}%  (paper production system: 8.6%)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""WU-UCT: parallel MCTS ("Watch the Unobserved", ICLR 2020) as a JAX
+framework — search core, environments, 10 LM architectures, training,
+serving, distribution, Pallas TPU kernels.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

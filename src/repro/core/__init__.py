@@ -1,0 +1,31 @@
+# The paper's primary contribution: WU-UCT parallel MCTS (wave-scheduled,
+# SPMD-shardable) plus the baseline parallelizations it is compared against.
+from .policies import PolicyConfig
+from .tree import Tree, init_tree
+from .wu_uct import SearchConfig, SearchResult, make_searcher, play_episode, run_search
+from .async_search import make_async_searcher, run_async_search
+from .baselines import (
+    make_algorithm,
+    make_config,
+    run_leafp,
+    run_rootp,
+    run_treep,
+)
+
+__all__ = [
+    "PolicyConfig",
+    "Tree",
+    "init_tree",
+    "SearchConfig",
+    "SearchResult",
+    "make_async_searcher",
+    "make_searcher",
+    "play_episode",
+    "run_async_search",
+    "run_search",
+    "make_algorithm",
+    "make_config",
+    "run_leafp",
+    "run_rootp",
+    "run_treep",
+]

@@ -1,0 +1,263 @@
+"""Async-slot WU-UCT — a faithful functional port of the paper's Algorithm 1.
+
+Unlike the wave engine (barrier per wave), this engine reproduces the
+master–worker *interleaving* of the paper's real system:
+
+* ``wave_size`` slots model the worker pool; every master tick advances each
+  busy slot by **one environment step** (vmapped — the parallel part);
+* rollouts terminate at *different* ticks (episodes end at different
+  depths), and a finished slot settles (complete update, Algorithm 3) and is
+  refilled **immediately** via a fresh selection (eq. 4) + incomplete update
+  (Algorithm 2) — no slot ever waits for the slowest rollout.  This is the
+  framework's search-side straggler mitigation;
+* expansion is a one-step task executed in the same vmapped tick (the paper
+  uses a separate expansion pool; Fig. 2 shows those workers under-utilized,
+  so folding expansion into the slot loses nothing — DESIGN.md §2).
+
+The entire search is one jitted ``lax.while_loop`` program.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+from . import tree as tree_lib
+from .policies import expansion_action
+from .tree import Tree
+from .wu_uct import SearchConfig, SearchResult, traverse, _mark_in_flight, _settle
+
+Pytree = Any
+
+FREE, EXPAND, SIM = 0, 1, 2
+
+
+class _AsyncSlots(NamedTuple):
+    kind: jax.Array        # i32[W]  FREE / EXPAND / SIM
+    sim_node: jax.Array    # i32[W]  node being evaluated
+    act: jax.Array         # i32[W]  expansion action (EXPAND phase)
+    state: Pytree          # pytree[W, ...] current rollout env state
+    rollout_done: jax.Array  # bool[W]
+    acc: jax.Array         # f32[W] discounted return accumulator
+    disc: jax.Array        # f32[W]
+    steps: jax.Array       # i32[W] simulation steps taken
+
+
+def run_async_search(
+    env: Environment,
+    cfg: SearchConfig,
+    root_state: Pytree,
+    rng: jax.Array,
+) -> SearchResult:
+    W = cfg.wave_size
+    T = cfg.num_simulations
+    width = min(cfg.max_width, env.num_actions)
+    capacity = T + W + 1
+    tree0 = tree_lib.init_tree(root_state, capacity, env.num_actions)
+
+    def slot_state0():
+        proto = jax.tree.map(
+            lambda x: jnp.zeros((W,) + jnp.shape(x), jnp.asarray(x).dtype),
+            root_state,
+        )
+        return _AsyncSlots(
+            kind=jnp.zeros((W,), jnp.int32),
+            sim_node=jnp.zeros((W,), jnp.int32),
+            act=jnp.zeros((W,), jnp.int32),
+            state=proto,
+            rollout_done=jnp.zeros((W,), jnp.bool_),
+            acc=jnp.zeros((W,), jnp.float32),
+            disc=jnp.ones((W,), jnp.float32),
+            steps=jnp.zeros((W,), jnp.int32),
+        )
+
+    def set_slot(slots: _AsyncSlots, j, **kw) -> _AsyncSlots:
+        upd = {}
+        for f in slots._fields:
+            v = getattr(slots, f)
+            if f in kw:
+                if f == "state":
+                    v = jax.tree.map(lambda b, x: b.at[j].set(x), v, kw[f])
+                else:
+                    v = v.at[j].set(kw[f])
+            upd[f] = v
+        return _AsyncSlots(**upd)
+
+    # ------------------------------------------------------------------
+    # Master tick
+    # ------------------------------------------------------------------
+    def refill(carry):
+        """Fill FREE slots with fresh selections (Algorithm 1 main loop)."""
+        tree, slots, rng, t_launch, t_done = carry
+
+        def body(j, c):
+            tree, slots, rng, t_launch, t_done = c
+            rng, k_t, k_e = jax.random.split(rng, 3)
+            want = (slots.kind[j] == FREE) & (t_launch < T)
+
+            def do_fill(op):
+                tree, slots, t_launch, t_done = op
+                node = traverse(tree, k_t, cfg)
+                kids = tree.children[node]
+                n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
+                is_term = tree.terminal[node]
+                at_depth = tree.depth[node] >= cfg.max_depth
+                needs_exp = (
+                    jnp.logical_not(is_term)
+                    & jnp.logical_not(at_depth)
+                    & (n_tried < width)
+                )
+                act = expansion_action(tree, node, k_e)
+                tree, child = jax.lax.cond(
+                    needs_exp,
+                    lambda t: tree_lib.reserve_child(t, node, act),
+                    lambda t: (t, node),
+                    tree,
+                )
+                sim_node = jnp.where(needs_exp, child, node).astype(jnp.int32)
+                tree = _mark_in_flight(tree, sim_node, cfg)
+
+                # Terminal hit: settle instantly, slot stays FREE (the paper
+                # counts it as a completed simulation with return 0).
+                def settle_term(t):
+                    return _settle(t, sim_node, jnp.float32(0.0), cfg)
+
+                tree = jax.lax.cond(is_term, settle_term, lambda t: t, tree)
+                parent_state = tree_lib.get_state(tree, node)
+                slots2 = set_slot(
+                    slots,
+                    j,
+                    kind=jnp.where(
+                        is_term, FREE, jnp.where(needs_exp, EXPAND, SIM)
+                    ).astype(jnp.int32),
+                    sim_node=sim_node,
+                    act=act,
+                    state=parent_state,
+                    rollout_done=tree.terminal[sim_node],
+                    acc=jnp.float32(0.0),
+                    disc=jnp.float32(1.0),
+                    steps=jnp.int32(0),
+                )
+                return (
+                    tree,
+                    slots2,
+                    t_launch + 1,
+                    t_done + is_term.astype(jnp.int32),
+                )
+
+            tree, slots, t_launch, t_done = jax.lax.cond(
+                want, do_fill, lambda op: op, (tree, slots, t_launch, t_done)
+            )
+            return tree, slots, rng, t_launch, t_done
+
+        return jax.lax.fori_loop(0, W, body, carry)
+
+    def tick(slots: _AsyncSlots, rng) -> tuple[_AsyncSlots, Pytree, jax.Array, jax.Array]:
+        """Advance every busy slot by one env step (the parallel part)."""
+        keys = jax.random.split(rng, W)
+
+        def one(kind, act, state, rollout_done, acc, disc, steps, key):
+            pol_act = env.policy(key, state)
+            a = jnp.where(kind == EXPAND, act, pol_act)
+            nxt, r, done = env.step(state, a)
+            is_sim = kind == SIM
+            live = is_sim & jnp.logical_not(rollout_done)
+            acc = acc + jnp.where(live, disc * r, 0.0)
+            disc = jnp.where(live, disc * cfg.gamma, disc)
+            steps = steps + jnp.where(kind != FREE, 1, 0)
+            new_state = jax.tree.map(
+                lambda a_, b_: jnp.where(kind != FREE, a_, b_), nxt, state
+            )
+            rollout_done = jnp.where(
+                kind == EXPAND, done, rollout_done | (is_sim & done)
+            )
+            return new_state, r, done, acc, disc, steps, rollout_done
+
+        out = jax.vmap(one)(
+            slots.kind, slots.act, slots.state, slots.rollout_done,
+            slots.acc, slots.disc, slots.steps, keys,
+        )
+        new_state, r_edge, done_edge, acc, disc, steps, rollout_done = out
+        slots = slots._replace(
+            state=new_state, acc=acc, disc=disc, steps=steps,
+            rollout_done=rollout_done,
+        )
+        return slots, r_edge, done_edge
+
+    def settle_finished(carry, r_edge, done_edge):
+        """EXPAND→SIM transitions (finalize child) + completed rollouts."""
+        tree, slots, t_done = carry
+
+        def body(j, c):
+            tree, slots, t_done = c
+            kind = slots.kind[j]
+
+            # EXPAND slot: its env step just produced the child state.
+            def finish_expand(op):
+                tree, slots = op
+                st = jax.tree.map(lambda x: x[j], slots.state)
+                tree = tree_lib.finalize_child(
+                    tree, slots.sim_node[j], st, r_edge[j], done_edge[j]
+                )
+                return tree, set_slot(
+                    slots, j, kind=jnp.int32(SIM), steps=jnp.int32(0)
+                )
+
+            tree, slots = jax.lax.cond(
+                kind == EXPAND, finish_expand, lambda op: op, (tree, slots)
+            )
+
+            # SIM slot finished (episode done or step cap): complete update.
+            fin = (slots.kind[j] == SIM) & (
+                slots.rollout_done[j] | (slots.steps[j] >= cfg.max_sim_steps)
+            )
+
+            def finish_sim(op):
+                tree, slots, t_done = op
+                tree = _settle(tree, slots.sim_node[j], slots.acc[j], cfg)
+                return tree, set_slot(slots, j, kind=jnp.int32(FREE)), t_done + 1
+
+            tree, slots, t_done = jax.lax.cond(
+                fin, finish_sim, lambda op: op, (tree, slots, t_done)
+            )
+            return tree, slots, t_done
+
+        return jax.lax.fori_loop(0, W, body, (tree, slots, t_done))
+
+    def cond(carry):
+        _, _, _, _, t_done, _ = carry
+        return t_done < T
+
+    def master_iter(carry):
+        tree, slots, rng, t_launch, t_done, ticks = carry
+        rng, k_tick = jax.random.split(rng)
+        tree, slots, rng, t_launch, t_done = refill(
+            (tree, slots, rng, t_launch, t_done)
+        )
+        slots, r_edge, done_edge = tick(slots, k_tick)
+        tree, slots, t_done = settle_finished(
+            (tree, slots, t_done), r_edge, done_edge
+        )
+        return tree, slots, rng, t_launch, t_done, ticks + 1
+
+    init = (tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+    tree, slots, _, _, _, ticks = jax.lax.while_loop(cond, master_iter, init)
+
+    root_n, root_v = tree_lib.root_action_stats(tree)
+    return SearchResult(
+        action=tree_lib.best_root_action(tree),
+        root_n=root_n,
+        root_v=root_v,
+        tree_size=tree.size,
+        dup_selections=jnp.float32(0.0),
+        max_o=ticks.astype(jnp.float32),  # repurposed: master ticks used
+    )
+
+
+def make_async_searcher(env: Environment, cfg: SearchConfig, jit: bool = True):
+    fn = functools.partial(run_async_search, env, cfg)
+    return jax.jit(fn) if jit else fn

@@ -1,0 +1,227 @@
+"""Baseline parallel MCTS algorithms from the paper (Sec. 4, App. B).
+
+* sequential UCT     — eq. (2), one rollout at a time (Algorithm 1 w/ W=1).
+* LeafP  (Alg. 4)    — one selection, ``W`` simulations of the same node.
+* TreeP  (Alg. 5)    — shared tree + virtual loss ``r_VL``.
+* TreeP-VC (App. E)  — virtual loss + virtual pseudo-count, eq. (7).
+* RootP  (Alg. 6)    — ``K`` independent trees; root statistics merged.
+
+All reuse the wave engine in :mod:`wu_uct` so that speed and performance
+comparisons isolate the *algorithm*, exactly as the paper does (App. D:
+"building all algorithms in the same package ... eliminates other factors").
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+from . import tree as tree_lib
+from .policies import PolicyConfig, expansion_action
+from .tree import Tree
+from .wu_uct import (
+    KIND_EXPAND,
+    KIND_TERMINAL,
+    SearchConfig,
+    SearchResult,
+    _phase2_work,
+    _Slots,
+    rollout_return,
+    run_search,
+    traverse,
+)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# Config builders — each baseline is the wave engine in a different mode.
+# ---------------------------------------------------------------------------
+
+
+def wu_uct_config(**kw) -> SearchConfig:
+    kw.setdefault("policy", PolicyConfig(kind="wu_uct", beta=kw.pop("beta", 1.0)))
+    return SearchConfig(stat_mode="wu", **kw)
+
+
+def sequential_uct_config(**kw) -> SearchConfig:
+    kw.setdefault("policy", PolicyConfig(kind="uct", beta=kw.pop("beta", 1.0)))
+    kw["wave_size"] = 1
+    return SearchConfig(stat_mode="none", **kw)
+
+
+def treep_config(r_vl: float = 1.0, **kw) -> SearchConfig:
+    beta = kw.pop("beta", 1.0)
+    kw.setdefault("policy", PolicyConfig(kind="treep", beta=beta, r_vl=r_vl))
+    return SearchConfig(stat_mode="vl", **kw)
+
+
+def treep_vc_config(r_vl: float = 1.0, n_vl: float = 1.0, **kw) -> SearchConfig:
+    beta = kw.pop("beta", 1.0)
+    kw.setdefault(
+        "policy", PolicyConfig(kind="treep_vc", beta=beta, r_vl=r_vl, n_vl=n_vl)
+    )
+    # eq. (7) consumes the in-flight count c == O, so run 'wu' bookkeeping.
+    return SearchConfig(stat_mode="wu", **kw)
+
+
+# ---------------------------------------------------------------------------
+# LeafP — Algorithm 4.  One traversal per round; all W workers simulate the
+# same expanded node; each return is backpropagated individually.
+# ---------------------------------------------------------------------------
+
+
+def run_leafp(
+    env: Environment,
+    cfg: SearchConfig,
+    root_state: Pytree,
+    rng: jax.Array,
+) -> SearchResult:
+    W = cfg.wave_size
+    if cfg.num_simulations % W != 0:
+        raise ValueError("num_simulations must be divisible by wave_size")
+    num_rounds = cfg.num_simulations // W
+    capacity = num_rounds + 2
+    width = min(cfg.max_width, env.num_actions)
+    tree = tree_lib.init_tree(root_state, capacity, env.num_actions)
+    # LeafP scores with plain UCT — no in-flight statistics exist.
+    cfg = cfg._replace(policy=cfg.policy._replace(kind="uct"), stat_mode="none")
+
+    def round_body(i, carry):
+        tree, rng = carry
+        rng, k_t, k_e, k_sim = jax.random.split(rng, 4)
+        node = traverse(tree, k_t, cfg)
+        kids = tree.children[node]
+        n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
+        is_term = tree.terminal[node]
+        needs_expand = (
+            jnp.logical_not(is_term)
+            & (tree.depth[node] < cfg.max_depth)
+            & (n_tried < width)
+        )
+        act = expansion_action(tree, node, k_e)
+
+        def do_expand(t):
+            t, child = tree_lib.reserve_child(t, node, act)
+            st = tree_lib.get_state(t, node)
+            child_state, r_edge, done = env.step(st, act)
+            t = tree_lib.finalize_child(t, child, child_state, r_edge, done)
+            return t, child
+
+        tree, sim_node = jax.lax.cond(
+            needs_expand, do_expand, lambda t: (t, node), tree
+        )
+
+        # All W workers simulate the same node (this is LeafP's defining —
+        # and failure-inducing — property).
+        start_state = tree_lib.get_state(tree, sim_node)
+        start_done = tree.terminal[sim_node]
+        rets = jax.vmap(
+            lambda k: rollout_return(env, cfg, start_state, start_done, k)
+        )(jax.random.split(k_sim, W))
+
+        def bp_body(j, t):
+            return tree_lib.backprop_update(t, sim_node, rets[j], cfg.gamma)
+
+        tree = jax.lax.fori_loop(0, W, bp_body, tree)
+        return tree, rng
+
+    tree, _ = jax.lax.fori_loop(0, num_rounds, round_body, (tree, rng))
+    root_n, root_v = tree_lib.root_action_stats(tree)
+    return SearchResult(
+        action=tree_lib.best_root_action(tree),
+        root_n=root_n,
+        root_v=root_v,
+        tree_size=tree.size,
+        dup_selections=jnp.float32(W - 1),  # by construction
+        max_o=jnp.float32(0.0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# TreeP — Algorithm 5 — is the wave engine with stat_mode='vl'.
+# ---------------------------------------------------------------------------
+
+
+def run_treep(env, cfg, root_state, rng, constrain=None) -> SearchResult:
+    if cfg.stat_mode != "vl":
+        cfg = cfg._replace(stat_mode="vl", policy=cfg.policy._replace(kind="treep"))
+    return run_search(env, cfg, root_state, rng, constrain=constrain)
+
+
+# ---------------------------------------------------------------------------
+# RootP — Algorithm 6.  K independent sequential-UCT trees over the same
+# root state (different chance keys), statistics merged at move time.
+# ---------------------------------------------------------------------------
+
+
+def run_rootp(
+    env: Environment,
+    cfg: SearchConfig,
+    root_state: Pytree,
+    rng: jax.Array,
+) -> SearchResult:
+    K = cfg.wave_size
+    if cfg.num_simulations % K != 0:
+        raise ValueError("num_simulations must be divisible by wave_size (=K)")
+    sub_cfg = cfg._replace(
+        num_simulations=cfg.num_simulations // K,
+        wave_size=1,
+        stat_mode="none",
+        policy=cfg.policy._replace(kind="uct"),
+    )
+
+    def one_worker(key):
+        res = run_search(env, sub_cfg, root_state, key)
+        return res.root_n, res.root_v, res.tree_size
+
+    ns, vs, sizes = jax.vmap(one_worker)(jax.random.split(rng, K))
+    n_tot = jnp.sum(ns, axis=0)
+    v_tot = jnp.where(
+        n_tot > 0, jnp.sum(ns * jnp.where(jnp.isfinite(vs), vs, 0.0), axis=0)
+        / jnp.maximum(n_tot, 1e-9), -jnp.inf
+    )
+    action = jnp.argmax(n_tot).astype(jnp.int32)
+    return SearchResult(
+        action=action,
+        root_n=n_tot,
+        root_v=v_tot,
+        tree_size=jnp.sum(sizes),
+        dup_selections=jnp.float32(0.0),
+        max_o=jnp.float32(0.0),
+    )
+
+
+ALGORITHMS = {
+    "wu_uct": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
+    "uct": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
+    "leafp": lambda env, cfg, s, r, **kw: run_leafp(env, cfg, s, r),
+    "treep": run_treep,
+    "treep_vc": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
+    "rootp": lambda env, cfg, s, r, **kw: run_rootp(env, cfg, s, r),
+}
+
+
+def make_config(algorithm: str, **kw) -> SearchConfig:
+    builders = {
+        "wu_uct": wu_uct_config,
+        "uct": sequential_uct_config,
+        "leafp": lambda **k: SearchConfig(
+            stat_mode="none", policy=PolicyConfig(kind="uct", beta=k.pop("beta", 1.0)), **k
+        ),
+        "treep": treep_config,
+        "treep_vc": treep_vc_config,
+        "rootp": lambda **k: SearchConfig(
+            stat_mode="none", policy=PolicyConfig(kind="uct", beta=k.pop("beta", 1.0)), **k
+        ),
+    }
+    return builders[algorithm](**kw)
+
+
+def make_algorithm(algorithm: str, env: Environment, cfg: SearchConfig, jit=True):
+    fn = functools.partial(ALGORITHMS[algorithm], env, cfg)
+    return jax.jit(fn) if jit else fn

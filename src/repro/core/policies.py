@@ -1,0 +1,112 @@
+"""Tree (node-selection) policies.
+
+Implements the four selection rules studied by the paper:
+
+* ``uct``      — eq. (2): classic UCB1-over-trees.
+* ``wu_uct``   — eq. (4): the paper's contribution; unobserved-sample counts
+                 ``O`` corrects both the parent log term and the child
+                 denominator.
+* ``treep``    — eq. (2) over virtual-loss-adjusted values ``V − VL``
+                 (Chaslot et al. 2008 / Algorithm 5).
+* ``treep_vc`` — eq. (7), App. E: virtual loss *and* virtual pseudo-count,
+                 ``V' = (N·V − c·r_VL) / (N + c·n_VL)`` with ``c`` in-flight
+                 queries (tracked via ``O``), non-destructively applied at
+                 scoring time.
+
+All functions return per-action scores for one node; invalid actions get
+``-inf``.  They are pure and shape-static so they can be vmapped over nodes /
+trees and fused into the Pallas ``tree_select`` kernel (kernels/tree_select).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tree import Tree
+
+
+class PolicyConfig(NamedTuple):
+    kind: str = "wu_uct"   # uct | wu_uct | treep | treep_vc
+    beta: float = 1.0      # exploration constant (paper: β)
+    r_vl: float = 1.0      # TreeP virtual loss
+    n_vl: float = 1.0      # TreeP virtual pseudo-count (eq. 7)
+
+
+def child_scores(tree: Tree, node: jax.Array, cfg: PolicyConfig) -> jax.Array:
+    """Scores of every action at ``node``; -inf for untried/pending children."""
+    kids = tree.children[node]                       # i32[A]
+    safe = jnp.maximum(kids, 0)
+    valid = (kids >= 0) & jnp.logical_not(tree.pending[safe])
+
+    n_c = tree.N[safe]
+    o_c = tree.O[safe]
+    v_c = tree.V[safe]
+    vl_c = tree.VL[safe]
+    n_p = tree.N[node]
+    o_p = tree.O[node]
+
+    if cfg.kind == "wu_uct":
+        # eq. (4): include unobserved samples in both terms.
+        log_term = jnp.log(jnp.maximum(n_p + o_p, 1.0))
+        denom = n_c + o_c
+        explore = cfg.beta * jnp.sqrt(2.0 * log_term / jnp.maximum(denom, 1e-9))
+        explore = jnp.where(denom > 0, explore, jnp.inf)
+        score = v_c + explore
+    elif cfg.kind == "uct":
+        # eq. (2).
+        log_term = jnp.log(jnp.maximum(n_p, 1.0))
+        explore = cfg.beta * jnp.sqrt(2.0 * log_term / jnp.maximum(n_c, 1e-9))
+        explore = jnp.where(n_c > 0, explore, jnp.inf)
+        score = v_c + explore
+    elif cfg.kind == "treep":
+        # eq. (2) over virtual-loss-adjusted values.  ``VL`` holds the summed
+        # in-flight virtual losses (added at selection, removed at backprop).
+        log_term = jnp.log(jnp.maximum(n_p, 1.0))
+        explore = cfg.beta * jnp.sqrt(2.0 * log_term / jnp.maximum(n_c, 1e-9))
+        explore = jnp.where(n_c > 0, explore, jnp.inf)
+        score = (v_c - vl_c) + explore
+    elif cfg.kind == "treep_vc":
+        # eq. (7) with c = O in-flight queries, applied non-destructively.
+        c = o_c
+        v_adj = (n_c * v_c - c * cfg.r_vl) / jnp.maximum(n_c + c * cfg.n_vl, 1e-9)
+        log_term = jnp.log(jnp.maximum(n_p + o_p, 1.0))
+        denom = n_c + c * cfg.n_vl
+        explore = cfg.beta * jnp.sqrt(2.0 * log_term / jnp.maximum(denom, 1e-9))
+        explore = jnp.where(denom > 0, explore, jnp.inf)
+        score = v_adj + explore
+    else:  # pragma: no cover - guarded by config validation
+        raise ValueError(f"unknown policy kind: {cfg.kind}")
+
+    return jnp.where(valid, score, -jnp.inf)
+
+
+def select_action(
+    tree: Tree, node: jax.Array, cfg: PolicyConfig
+) -> tuple[jax.Array, jax.Array]:
+    """(argmax action, whether any action was selectable) at ``node``."""
+    scores = child_scores(tree, node, cfg)
+    any_valid = jnp.any(jnp.isfinite(scores) | (scores == jnp.inf))
+    return jnp.argmax(scores).astype(jnp.int32), any_valid
+
+
+def expansion_action(
+    tree: Tree,
+    node: jax.Array,
+    rng: jax.Array,
+    prior_logits: jax.Array | None = None,
+) -> jax.Array:
+    """Sample an *untried* action from the prior (paper Algorithm 7).
+
+    ``prior_logits`` defaults to uniform; a policy network's logits at the
+    node state can be passed to bias expansion, as in the paper's production
+    system (App. C.2).
+    """
+    tried = tree.children[node] >= 0
+    if prior_logits is None:
+        prior_logits = jnp.zeros((tree.num_actions,), jnp.float32)
+    logits = jnp.where(tried, -jnp.inf, prior_logits)
+    g = jax.random.gumbel(rng, (tree.num_actions,))
+    return jnp.argmax(logits + g).astype(jnp.int32)

@@ -1,0 +1,169 @@
+"""Pure-Python reference MCTS (the test oracle).
+
+A dict-based, straightforwardly-sequential implementation of Algorithms 1-3
+and 7-8 of the paper.  It shares *no* code with the JAX implementation and is
+used by the tests to validate the SoA tree statistics: with ``wave_size=1``
+and a shared PRNG discipline the JAX engine must produce identical trees.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass
+class RefNode:
+    state: Any
+    parent: Optional["RefNode"]
+    action: int = -1
+    reward: float = 0.0          # edge reward into this node
+    terminal: bool = False
+    depth: int = 0
+    children: dict = field(default_factory=dict)
+    N: float = 0.0
+    O: float = 0.0
+    V: float = 0.0
+
+
+class RefMCTS:
+    """Sequential WU-UCT/UCT oracle over a python environment interface.
+
+    ``env`` must provide ``num_actions``, ``step(state, a) -> (s', r, done)``.
+    ``rng`` draws are delegated to caller-provided callables so tests can
+    replay the exact random choices of the JAX engine.
+    """
+
+    def __init__(
+        self,
+        env,
+        beta: float = 1.0,
+        gamma: float = 0.99,
+        max_depth: int = 100,
+        max_width: int = 10**9,
+        use_o: bool = True,
+    ):
+        self.env = env
+        self.beta = beta
+        self.gamma = gamma
+        self.max_depth = max_depth
+        self.max_width = min(max_width, env.num_actions)
+        self.use_o = use_o
+
+    # -- paper eq. (2)/(4) --------------------------------------------------
+    def score(self, parent: RefNode, child: RefNode) -> float:
+        if self.use_o:
+            log_term = math.log(max(parent.N + parent.O, 1.0))
+            denom = child.N + child.O
+        else:
+            log_term = math.log(max(parent.N, 1.0))
+            denom = child.N
+        if denom <= 0:
+            return float("inf")
+        return child.V + self.beta * math.sqrt(2.0 * log_term / denom)
+
+    def select(self, root: RefNode, coin_fn, tiebreak="first") -> RefNode:
+        node = root
+        while True:
+            n_tried = len(node.children)
+            if (
+                n_tried == 0
+                or node.depth >= self.max_depth
+                or node.terminal
+                or (n_tried < self.max_width and coin_fn())
+            ):
+                return node
+            best, best_score = None, -float("inf")
+            for a in sorted(node.children):
+                c = node.children[a]
+                s = self.score(node, c)
+                if s > best_score:
+                    best, best_score = c, s
+            if best is None:
+                return node
+            node = best
+
+    def expand(self, node: RefNode, action: int) -> RefNode:
+        assert action not in node.children
+        s2, r, done = self.env.step(node.state, action)
+        child = RefNode(
+            state=s2,
+            parent=node,
+            action=action,
+            reward=float(r),
+            terminal=bool(done),
+            depth=node.depth + 1,
+        )
+        node.children[action] = child
+        return child
+
+    # -- paper Algorithm 2 ---------------------------------------------------
+    def incomplete_update(self, node: RefNode) -> None:
+        while node is not None:
+            node.O += 1.0
+            node = node.parent
+
+    # -- paper Algorithm 3 ---------------------------------------------------
+    def complete_update(self, node: RefNode, sim_return: float) -> None:
+        r_bar = sim_return
+        while node is not None:
+            node.N += 1.0
+            node.O -= 1.0
+            r_bar = node.reward + self.gamma * r_bar
+            node.V = ((node.N - 1.0) * node.V + r_bar) / node.N
+            node = node.parent
+
+    # -- paper Algorithm 8 ---------------------------------------------------
+    def backprop(self, node: RefNode, sim_return: float) -> None:
+        r_bar = sim_return
+        while node is not None:
+            node.N += 1.0
+            r_bar = node.reward + self.gamma * r_bar
+            node.V = ((node.N - 1.0) * node.V + r_bar) / node.N
+            node = node.parent
+
+    def simulate(self, state, already_done: bool, policy_fn, max_steps: int):
+        if already_done:
+            return 0.0
+        acc, disc = 0.0, 1.0
+        s = state
+        for _ in range(max_steps):
+            a = policy_fn(s)
+            s, r, done = self.env.step(s, a)
+            acc += disc * float(r)
+            disc *= self.gamma
+            if done:
+                break
+        return acc
+
+    def search(
+        self,
+        root_state,
+        num_simulations: int,
+        coin_fn: Callable[[], bool],
+        expand_fn: Callable[[RefNode], int],
+        policy_fn,
+        max_sim_steps: int = 100,
+    ) -> RefNode:
+        """Sequential search; with W=1 the wave engine must match this."""
+        root = RefNode(state=root_state, parent=None)
+        for _ in range(num_simulations):
+            node = self.select(root, coin_fn)
+            n_tried = len(node.children)
+            if node.terminal:
+                self.incomplete_update(node)
+                self.complete_update(node, 0.0)
+                continue
+            if node.depth < self.max_depth and n_tried < self.max_width:
+                node = self.expand(node, expand_fn(node))
+            self.incomplete_update(node)
+            ret = self.simulate(
+                node.state, node.terminal, policy_fn, max_sim_steps
+            )
+            self.complete_update(node, ret)
+        return root
+
+    @staticmethod
+    def best_action(root: RefNode) -> int:
+        return max(root.children.items(), key=lambda kv: kv[1].N)[0]

@@ -1,0 +1,249 @@
+"""Structure-of-arrays search tree for (parallel) MCTS.
+
+The tree is a pure pytree of fixed-capacity arrays so that every search
+algorithm in this package (WU-UCT, sequential UCT, LeafP, TreeP, RootP) is a
+single jittable program built from ``jax.lax`` control flow.
+
+Layout
+------
+* ``children[s, a]`` is the node index reached from node ``s`` by action
+  ``a`` (or ``-1``).  Indexing children *by action* makes "fully expanded" and
+  "untried action" checks O(1) masked ops and prevents two in-flight
+  expansions from racing on the same action.
+* ``pending[s]`` marks a node whose index was reserved at selection time but
+  whose environment state has not been produced yet (its expansion is still
+  in flight).  Pending nodes cannot be descended into, but their ``O`` mass is
+  already visible along the path — the "watch the unobserved" statistics of
+  the paper, available as early as the rollout is initiated.
+* ``states`` is the centralized game-state storage of the paper (App. A):
+  a pytree whose leaves are stacked ``[capacity, ...]`` buffers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+NO_NODE = jnp.int32(-1)
+
+
+class Tree(NamedTuple):
+    """Fixed-capacity SoA search tree (a pure pytree)."""
+
+    parent: jax.Array      # i32[M]       parent node index (-1 for root / free)
+    action: jax.Array      # i32[M]       action on the edge from parent
+    children: jax.Array    # i32[M, A]    child index per action (-1 = untried)
+    N: jax.Array           # f32[M]       completed-visit counts  (paper: N_s)
+    O: jax.Array           # f32[M]       in-flight visit counts  (paper: O_s)
+    V: jax.Array           # f32[M]       running mean value      (paper: V_s)
+    VL: jax.Array          # f32[M]       virtual-loss accumulator (TreeP only)
+    R: jax.Array           # f32[M]       reward on the edge INTO this node
+    terminal: jax.Array    # bool[M]
+    pending: jax.Array     # bool[M]      reserved, expansion in flight
+    depth: jax.Array       # i32[M]
+    size: jax.Array        # i32[]        number of allocated nodes
+    states: Pytree         # pytree[M, ...] env state per node
+
+    @property
+    def capacity(self) -> int:
+        return self.parent.shape[0]
+
+    @property
+    def num_actions(self) -> int:
+        return self.children.shape[1]
+
+
+def init_tree(root_state: Pytree, capacity: int, num_actions: int) -> Tree:
+    """Allocate a tree with ``root_state`` installed at node 0."""
+    states = jax.tree.map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype)
+        .at[0]
+        .set(x),
+        root_state,
+    )
+    return Tree(
+        parent=jnp.full((capacity,), NO_NODE, jnp.int32),
+        action=jnp.full((capacity,), NO_NODE, jnp.int32),
+        children=jnp.full((capacity, num_actions), NO_NODE, jnp.int32),
+        N=jnp.zeros((capacity,), jnp.float32),
+        O=jnp.zeros((capacity,), jnp.float32),
+        V=jnp.zeros((capacity,), jnp.float32),
+        VL=jnp.zeros((capacity,), jnp.float32),
+        R=jnp.zeros((capacity,), jnp.float32),
+        terminal=jnp.zeros((capacity,), jnp.bool_),
+        pending=jnp.zeros((capacity,), jnp.bool_),
+        depth=jnp.zeros((capacity,), jnp.int32),
+        size=jnp.int32(1),
+        states=states,
+    )
+
+
+def get_state(tree: Tree, node: jax.Array) -> Pytree:
+    return jax.tree.map(lambda x: x[node], tree.states)
+
+
+def set_state(tree: Tree, node: jax.Array, state: Pytree) -> Tree:
+    states = jax.tree.map(lambda b, x: b.at[node].set(x), tree.states, state)
+    return tree._replace(states=states)
+
+
+# ---------------------------------------------------------------------------
+# Path walks.  Each walk is a while_loop over parent pointers; trip count is
+# bounded by the tree depth.  These are the master-side O(depth) updates of
+# the paper (Algorithms 2, 3 and 8) — cheap by construction, which is why the
+# paper keeps them centralized and parallelizes only expansion + simulation.
+# ---------------------------------------------------------------------------
+
+
+def incomplete_update(tree: Tree, node: jax.Array) -> Tree:
+    """Paper Algorithm 2: ``O_s += 1`` from ``node`` up to the root."""
+
+    def cond(c):
+        n, _ = c
+        return n != NO_NODE
+
+    def body(c):
+        n, O = c
+        return tree.parent[n], O.at[n].add(1.0)
+
+    _, O = jax.lax.while_loop(cond, body, (node, tree.O))
+    return tree._replace(O=O)
+
+
+def complete_update(
+    tree: Tree, node: jax.Array, sim_return: jax.Array, gamma: float
+) -> Tree:
+    """Paper Algorithm 3: ``N+=1; O-=1; r̄ ← R_s + γ·r̄; V ← mean`` leaf→root."""
+
+    def cond(c):
+        n, *_ = c
+        return n != NO_NODE
+
+    def body(c):
+        n, r_bar, N, O, V = c
+        new_n = N[n] + 1.0
+        r_bar = tree.R[n] + gamma * r_bar
+        new_v = ((new_n - 1.0) * V[n] + r_bar) / new_n
+        return (
+            tree.parent[n],
+            r_bar,
+            N.at[n].set(new_n),
+            O.at[n].add(-1.0),
+            V.at[n].set(new_v),
+        )
+
+    _, _, N, O, V = jax.lax.while_loop(
+        cond, body, (node, jnp.float32(sim_return), tree.N, tree.O, tree.V)
+    )
+    return tree._replace(N=N, O=O, V=V)
+
+
+def backprop_update(
+    tree: Tree, node: jax.Array, sim_return: jax.Array, gamma: float
+) -> Tree:
+    """Paper Algorithm 8 (sequential backprop; no O bookkeeping)."""
+
+    def cond(c):
+        n, *_ = c
+        return n != NO_NODE
+
+    def body(c):
+        n, r_bar, N, V = c
+        new_n = N[n] + 1.0
+        r_bar = tree.R[n] + gamma * r_bar
+        new_v = ((new_n - 1.0) * V[n] + r_bar) / new_n
+        return tree.parent[n], r_bar, N.at[n].set(new_n), V.at[n].set(new_v)
+
+    _, _, N, V = jax.lax.while_loop(
+        cond, body, (node, jnp.float32(sim_return), tree.N, tree.V)
+    )
+    return tree._replace(N=N, V=V)
+
+
+def add_virtual_loss(tree: Tree, node: jax.Array, r_vl: float) -> Tree:
+    """TreeP: ``V_s ← V_s − r_VL`` along the selected path (and track count)."""
+
+    def cond(c):
+        n, _ = c
+        return n != NO_NODE
+
+    def body(c):
+        n, VL = c
+        return tree.parent[n], VL.at[n].add(r_vl)
+
+    _, VL = jax.lax.while_loop(cond, body, (node, tree.VL))
+    return tree._replace(VL=VL)
+
+
+def remove_virtual_loss(tree: Tree, node: jax.Array, r_vl: float) -> Tree:
+    def cond(c):
+        n, _ = c
+        return n != NO_NODE
+
+    def body(c):
+        n, VL = c
+        return tree.parent[n], VL.at[n].add(-r_vl)
+
+    _, VL = jax.lax.while_loop(cond, body, (node, tree.VL))
+    return tree._replace(VL=VL)
+
+
+def reserve_child(
+    tree: Tree, parent: jax.Array, act: jax.Array
+) -> tuple[Tree, jax.Array]:
+    """Allocate a pending child of ``parent`` via edge ``act``.
+
+    The child becomes visible to the modified UCT policy immediately (its
+    path ``O`` mass is added by the caller's incomplete update) but cannot be
+    descended into until its expansion result is written by
+    :func:`finalize_child`.
+    """
+    idx = tree.size
+    tree = tree._replace(
+        parent=tree.parent.at[idx].set(parent),
+        action=tree.action.at[idx].set(act),
+        children=tree.children.at[parent, act].set(idx),
+        pending=tree.pending.at[idx].set(True),
+        depth=tree.depth.at[idx].set(tree.depth[parent] + 1),
+        size=tree.size + 1,
+    )
+    return tree, idx
+
+
+def finalize_child(
+    tree: Tree,
+    idx: jax.Array,
+    state: Pytree,
+    reward: jax.Array,
+    done: jax.Array,
+) -> Tree:
+    """Write the expansion result into a reserved child."""
+    tree = set_state(tree, idx, state)
+    return tree._replace(
+        R=tree.R.at[idx].set(reward),
+        terminal=tree.terminal.at[idx].set(done),
+        pending=tree.pending.at[idx].set(False),
+    )
+
+
+def root_action_stats(tree: Tree) -> tuple[jax.Array, jax.Array]:
+    """Per-action (N, V) at the root; untried actions get N=0, V=-inf."""
+    kids = tree.children[0]
+    valid = kids >= 0
+    safe = jnp.maximum(kids, 0)
+    n = jnp.where(valid, tree.N[safe], 0.0)
+    v = jnp.where(valid, tree.V[safe], -jnp.inf)
+    return n, v
+
+
+def best_root_action(tree: Tree) -> jax.Array:
+    """Most-visited root action (value tiebreak)."""
+    n, v = root_action_stats(tree)
+    # lexicographic (N, V) argmax via small value perturbation
+    v_rank = jax.nn.softmax(jnp.where(jnp.isfinite(v), v, -1e9))
+    return jnp.argmax(n + 1e-6 * v_rank).astype(jnp.int32)

@@ -1,0 +1,413 @@
+"""WU-UCT — wave-scheduled parallel MCTS (the paper's Algorithm 1 on SPMD).
+
+TPU adaptation of the paper's master–worker architecture (see DESIGN.md §2):
+
+* the **master** (selection + incomplete/complete updates, Algorithms 1–3) is
+  replicated, deterministic bookkeeping over the SoA tree;
+* the **workers** are ``wave_size`` in-flight simulation slots whose expensive
+  expansion + simulation work is batched (``vmap``) and shardable over the
+  ``data`` mesh axis;
+* inside a wave, selections happen *sequentially with incomplete updates in
+  between*, so slot ``j`` sees the ``O`` mass of slots ``0..j-1`` — exactly
+  the information a freshly-idle worker sees in the paper's async system when
+  all other workers are busy.
+
+The same engine also executes the baselines (LeafP / TreeP / sequential UCT)
+by switching the statistics mode and the selection rule — this mirrors the
+paper's App. D, which implements all algorithms in one package so speed
+comparisons are apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+from . import tree as tree_lib
+from .policies import PolicyConfig, child_scores, expansion_action
+from .tree import Tree
+
+Pytree = Any
+
+
+class SearchConfig(NamedTuple):
+    num_simulations: int = 128      # T_max
+    wave_size: int = 16             # W — number of in-flight workers
+    max_depth: int = 100            # d_max
+    max_sim_steps: int = 100        # simulation rollout cap (App. D: 100)
+    max_width: int = 20             # search-width cap (paper: 5 tap / 20 Atari)
+    gamma: float = 0.99
+    policy: PolicyConfig = PolicyConfig()
+    stat_mode: str = "wu"           # wu | vl | none  (in-flight bookkeeping)
+    expand_coin: float = 0.5        # traversal rule (iii) stop probability
+    value_mix: float = 0.0          # R = (1-m)·R_simu + m·V(s)   (App. D: 0.5)
+    deterministic_expansion: bool = False  # first-untried action (tests/oracle)
+
+
+class SearchResult(NamedTuple):
+    action: jax.Array        # i32[] chosen root action
+    root_n: jax.Array        # f32[A] root child visit counts
+    root_v: jax.Array        # f32[A] root child values
+    tree_size: jax.Array     # i32[]
+    # Diagnostics for the exploration-collapse studies (Sec. 2.2 / Sec. 4):
+    dup_selections: jax.Array  # f32[] avg duplicate stop-nodes per wave
+    max_o: jax.Array           # f32[] peak O at root (in-flight pressure)
+
+
+# ---------------------------------------------------------------------------
+# Selection (paper Sec. 3.1 traversal with rules (i)-(iii))
+# ---------------------------------------------------------------------------
+
+
+def traverse(
+    tree: Tree, rng: jax.Array, cfg: SearchConfig
+) -> jax.Array:
+    """Walk the tree from the root by the configured tree policy."""
+    width = min(cfg.max_width, tree.num_actions)
+
+    def cond(carry):
+        _, _, stop = carry
+        return jnp.logical_not(stop)
+
+    def body(carry):
+        node, rng, _ = carry
+        rng, k_coin = jax.random.split(rng)
+        kids = tree.children[node]
+        n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
+        is_leaf = n_tried == 0
+        at_depth = tree.depth[node] >= cfg.max_depth
+        is_term = tree.terminal[node]
+        not_full = n_tried < width
+        coin = jax.random.uniform(k_coin) < cfg.expand_coin
+        stop = is_leaf | at_depth | is_term | (not_full & coin)
+
+        scores = child_scores(tree, node, cfg.policy)
+        best = jnp.argmax(scores)
+        any_valid = scores[best] > -jnp.inf
+        stop = stop | jnp.logical_not(any_valid)
+        nxt = jnp.where(stop, node, tree.children[node, best])
+        return nxt.astype(jnp.int32), rng, stop
+
+    node, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), rng, jnp.bool_(False))
+    )
+    return node
+
+
+# ---------------------------------------------------------------------------
+# Simulation (the worker-side rollout; paper Fig. 1(a) "simulation")
+# ---------------------------------------------------------------------------
+
+
+def rollout_return(
+    env: Environment,
+    cfg: SearchConfig,
+    state: Pytree,
+    already_done: jax.Array,
+    rng: jax.Array,
+) -> jax.Array:
+    """Discounted simulation return with optional value bootstrap/mixing."""
+
+    def cond(carry):
+        _, done, _, _, _, steps = carry
+        return jnp.logical_not(done) & (steps < cfg.max_sim_steps)
+
+    def body(carry):
+        state, done, acc, disc, rng, steps = carry
+        rng, k = jax.random.split(rng)
+        a = env.policy(k, state)
+        nxt, r, d = env.step(state, a)
+        acc = acc + disc * r
+        disc = disc * cfg.gamma
+        return nxt, done | d, acc, disc, rng, steps + 1
+
+    init = (
+        state,
+        jnp.asarray(already_done, jnp.bool_),
+        jnp.float32(0.0),
+        jnp.float32(1.0),
+        rng,
+        jnp.int32(0),
+    )
+    final_state, done, acc, disc, _, _ = jax.lax.while_loop(cond, body, init)
+
+    if env.value_fn is not None:
+        # Truncation bootstrap: R_simu = Σ γ^i r_i + γ^T V(s_T)  (App. D).
+        acc = acc + disc * jnp.where(done, 0.0, env.value_fn(final_state))
+        if cfg.value_mix > 0.0:
+            v0 = jnp.where(already_done, 0.0, env.value_fn(state))
+            acc = (1.0 - cfg.value_mix) * acc + cfg.value_mix * v0
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Wave engine
+# ---------------------------------------------------------------------------
+
+KIND_SIM = 0      # simulate from an existing node (no expansion)
+KIND_EXPAND = 1   # expand a new child, then simulate from it
+KIND_TERMINAL = 2 # traversal hit a terminal node: complete with return 0
+
+
+class _Slots(NamedTuple):
+    kind: jax.Array       # i32[W]
+    stop_node: jax.Array  # i32[W] node where traversal stopped
+    sim_node: jax.Array   # i32[W] node whose state seeds the simulation
+    act: jax.Array        # i32[W] expansion action (undefined for kind 0/2)
+
+
+def _mark_in_flight(tree: Tree, node: jax.Array, cfg: SearchConfig) -> Tree:
+    if cfg.stat_mode == "wu":
+        return tree_lib.incomplete_update(tree, node)
+    if cfg.stat_mode == "vl":
+        return tree_lib.add_virtual_loss(tree, node, cfg.policy.r_vl)
+    return tree
+
+
+def _settle(
+    tree: Tree, node: jax.Array, ret: jax.Array, cfg: SearchConfig
+) -> Tree:
+    if cfg.stat_mode == "wu":
+        return tree_lib.complete_update(tree, node, ret, cfg.gamma)
+    if cfg.stat_mode == "vl":
+        tree = tree_lib.remove_virtual_loss(tree, node, cfg.policy.r_vl)
+        return tree_lib.backprop_update(tree, node, ret, cfg.gamma)
+    return tree_lib.backprop_update(tree, node, ret, cfg.gamma)
+
+
+def _phase1_select(
+    tree: Tree, rng: jax.Array, cfg: SearchConfig
+) -> tuple[Tree, _Slots, jax.Array]:
+    """Sequentially select `wave_size` slots, applying in-flight statistics
+    between selections (the heart of WU-UCT)."""
+    W = cfg.wave_size
+    width = min(cfg.max_width, tree.num_actions)
+
+    def slot_body(j, carry):
+        tree, rng, slots = carry
+        rng, k_t, k_e = jax.random.split(rng, 3)
+        node = traverse(tree, k_t, cfg)
+
+        kids = tree.children[node]
+        n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
+        is_term = tree.terminal[node]
+        at_depth = tree.depth[node] >= cfg.max_depth
+        needs_expand = (
+            jnp.logical_not(is_term) & jnp.logical_not(at_depth) & (n_tried < width)
+        )
+        kind = jnp.where(
+            is_term, KIND_TERMINAL, jnp.where(needs_expand, KIND_EXPAND, KIND_SIM)
+        ).astype(jnp.int32)
+
+        if cfg.deterministic_expansion:
+            untried = tree.children[node] < 0
+            act = jnp.argmax(untried).astype(jnp.int32)
+        else:
+            act = expansion_action(tree, node, k_e)
+
+        def do_reserve(t):
+            return tree_lib.reserve_child(t, node, act)
+
+        def no_reserve(t):
+            return t, node
+
+        tree, child = jax.lax.cond(needs_expand, do_reserve, no_reserve, tree)
+        sim_node = jnp.where(needs_expand, child, node).astype(jnp.int32)
+
+        # Paper Algorithm 1: incomplete update as soon as the rollout is
+        # initiated; terminal hits settle immediately with return 0.
+        tree = _mark_in_flight(tree, sim_node, cfg)
+        tree = jax.lax.cond(
+            is_term,
+            lambda t: _settle(t, sim_node, jnp.float32(0.0), cfg),
+            lambda t: t,
+            tree,
+        )
+
+        slots = _Slots(
+            kind=slots.kind.at[j].set(kind),
+            stop_node=slots.stop_node.at[j].set(node),
+            sim_node=slots.sim_node.at[j].set(sim_node),
+            act=slots.act.at[j].set(act),
+        )
+        return tree, rng, slots
+
+    slots0 = _Slots(
+        kind=jnp.zeros((W,), jnp.int32),
+        stop_node=jnp.zeros((W,), jnp.int32),
+        sim_node=jnp.zeros((W,), jnp.int32),
+        act=jnp.zeros((W,), jnp.int32),
+    )
+    tree, rng, slots = jax.lax.fori_loop(0, W, slot_body, (tree, rng, slots0))
+
+    # Diagnostics: duplicate stop-nodes within this wave (exploration
+    # collapse indicator — Sec. 2.2 Fig. 1(c)).
+    sorted_stops = jnp.sort(slots.stop_node)
+    dups = jnp.sum((sorted_stops[1:] == sorted_stops[:-1]).astype(jnp.float32))
+    return tree, slots, dups
+
+
+def _phase2_work(
+    env: Environment,
+    cfg: SearchConfig,
+    tree: Tree,
+    slots: _Slots,
+    rng: jax.Array,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+):
+    """The parallel part: expansion env-step + simulation rollout per slot.
+
+    This is the only compute that touches the environment/policy network; on
+    a pod it shards over the ``data`` axis (``constrain`` installs the
+    sharding constraint for the GSPMD partitioner).
+    """
+    W = cfg.wave_size
+    keys = jax.random.split(rng, W)
+
+    def one_slot(kind, stop_node, sim_node, act, key):
+        parent_state = tree_lib.get_state(tree, stop_node)
+        child_state, r_edge, done_child = env.step(parent_state, act)
+        is_exp = kind == KIND_EXPAND
+        start_state = jax.tree.map(
+            lambda a, b: jnp.where(is_exp, a, b),
+            child_state,
+            tree_lib.get_state(tree, sim_node),
+        )
+        start_done = jnp.where(is_exp, done_child, tree.terminal[sim_node])
+        ret = rollout_return(env, cfg, start_state, start_done, key)
+        return child_state, r_edge, done_child, ret
+
+    args = (slots.kind, slots.stop_node, slots.sim_node, slots.act, keys)
+    if constrain is not None:
+        args = constrain(args)
+    out = jax.vmap(one_slot)(*args)
+    if constrain is not None:
+        out = constrain(out)
+    return out  # (child_states[W,...], r_edge[W], done_child[W], ret[W])
+
+
+def _phase3_settle(
+    tree: Tree,
+    cfg: SearchConfig,
+    slots: _Slots,
+    child_states: Pytree,
+    r_edge: jax.Array,
+    done_child: jax.Array,
+    rets: jax.Array,
+) -> Tree:
+    """Master-side completion: write expansion results + complete updates."""
+    W = cfg.wave_size
+
+    def slot_body(j, tree):
+        kind = slots.kind[j]
+        sim_node = slots.sim_node[j]
+
+        def do_finalize(t):
+            st = jax.tree.map(lambda x: x[j], child_states)
+            return tree_lib.finalize_child(t, sim_node, st, r_edge[j], done_child[j])
+
+        tree = jax.lax.cond(kind == KIND_EXPAND, do_finalize, lambda t: t, tree)
+        tree = jax.lax.cond(
+            kind != KIND_TERMINAL,
+            lambda t: _settle(t, sim_node, rets[j], cfg),
+            lambda t: t,
+            tree,
+        )
+        return tree
+
+    return jax.lax.fori_loop(0, W, slot_body, tree)
+
+
+def run_search(
+    env: Environment,
+    cfg: SearchConfig,
+    root_state: Pytree,
+    rng: jax.Array,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+) -> SearchResult:
+    """Full search from ``root_state``; returns the move decision + stats."""
+    if cfg.num_simulations % cfg.wave_size != 0:
+        raise ValueError("num_simulations must be divisible by wave_size")
+    num_waves = cfg.num_simulations // cfg.wave_size
+    capacity = cfg.num_simulations + cfg.wave_size + 1
+    tree = tree_lib.init_tree(root_state, capacity, env.num_actions)
+
+    def wave_body(i, carry):
+        tree, rng, dup_acc, max_o = carry
+        rng, k_sel, k_sim = jax.random.split(rng, 3)
+        tree, slots, dups = _phase1_select(tree, k_sel, cfg)
+        max_o = jnp.maximum(max_o, tree.O[0])
+        child_states, r_edge, done_child, rets = _phase2_work(
+            env, cfg, tree, slots, k_sim, constrain
+        )
+        tree = _phase3_settle(tree, cfg, slots, child_states, r_edge, done_child, rets)
+        return tree, rng, dup_acc + dups, max_o
+
+    tree, _, dup_acc, max_o = jax.lax.fori_loop(
+        0, num_waves, wave_body, (tree, rng, jnp.float32(0.0), jnp.float32(0.0))
+    )
+
+    root_n, root_v = tree_lib.root_action_stats(tree)
+    return SearchResult(
+        action=tree_lib.best_root_action(tree),
+        root_n=root_n,
+        root_v=root_v,
+        tree_size=tree.size,
+        dup_selections=dup_acc / num_waves,
+        max_o=max_o,
+    )
+
+
+def make_searcher(
+    env: Environment,
+    cfg: SearchConfig,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    jit: bool = True,
+):
+    """Build ``search(root_state, rng) -> SearchResult`` for this env/config."""
+    fn = functools.partial(run_search, env, cfg, constrain=constrain)
+    return jax.jit(fn) if jit else fn
+
+
+# ---------------------------------------------------------------------------
+# Episode runner (the outer gameplay loop of Sec. 5: one search per move)
+# ---------------------------------------------------------------------------
+
+
+def play_episode(
+    env: Environment,
+    cfg: SearchConfig,
+    rng: jax.Array,
+    max_moves: int = 64,
+    searcher=None,
+):
+    """Play one episode, calling the tree-search subroutine at every step.
+
+    Returns (episode_return, moves_used, done) — `moves_used` is the paper's
+    "game step" metric for the tap game.
+    """
+    search = searcher or make_searcher(env, cfg)
+
+    @jax.jit
+    def move(state, key):
+        k_search, k_step = jax.random.split(key)
+        res = search(state, k_search)
+        nxt, r, done = env.step(state, res.action)
+        return nxt, r, done, res
+
+    rng, k_init = jax.random.split(rng)
+    state = env.init(k_init)
+    total, moves, done = 0.0, 0, False
+    for _ in range(max_moves):
+        rng, k = jax.random.split(rng)
+        state, r, d, _ = move(state, k)
+        total += float(r)
+        moves += 1
+        if bool(d):
+            done = True
+            break
+    return total, moves, done

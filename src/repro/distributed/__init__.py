@@ -1,0 +1,17 @@
+from .sharding import (
+    batch_spec,
+    constrain,
+    data_axes,
+    logical_spec,
+    opt_state_shardings,
+    param_shardings,
+)
+
+__all__ = [
+    "batch_spec",
+    "constrain",
+    "data_axes",
+    "logical_spec",
+    "opt_state_shardings",
+    "param_shardings",
+]

@@ -1,0 +1,59 @@
+"""Gradient compression: int8 quantized all-reduce with error feedback.
+
+On a real pod the all-reduce would run over the int8 payload (8.0x wire
+saving vs f32 / 2.0x vs bf16); under GSPMD we emulate the numerics — quantize
+→ (all-reduce happens on the quantized values via the surrounding psum) →
+dequantize — and carry the quantization residual as *error feedback* so the
+bias vanishes over steps (Karimireddy et al., 2019).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: Pytree) -> Pytree:
+    """Stateless quantize→dequantize round trip (wire-format emulation)."""
+
+    def one(g):
+        q, s = _quantize(g.astype(jnp.float32))
+        return _dequantize(q, s).astype(g.dtype)
+
+    return jax.tree.map(one, grads)
+
+
+def compress_with_feedback(
+    grads: Pytree, error: Optional[Pytree]
+) -> tuple[Pytree, Pytree]:
+    """Error-feedback compression: returns (compressed grads, new residual)."""
+    if error is None:
+        error = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = _quantize(corrected)
+        deq = _dequantize(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (
+        treedef.unflatten([o[0] for o in out]),
+        treedef.unflatten([o[1] for o in out]),
+    )

@@ -1,0 +1,11 @@
+from .base import Environment
+from .bandit_tree import make_bandit_tree
+from .random_mdp import make_random_mdp
+from .tap_game import make_tap_game
+
+__all__ = [
+    "Environment",
+    "make_bandit_tree",
+    "make_random_mdp",
+    "make_tap_game",
+]

@@ -1,0 +1,108 @@
+"""Synthetic tree-structured MDP with a known optimum.
+
+A depth-``D``, branching-``A`` tree whose edge rewards are pseudo-random but
+*fixed by a seed* (hashed from the implicit node id), so that the optimal
+return and the optimal first action are computable exactly by dynamic
+programming.  This is the instrument we use to measure the failure modes the
+paper describes analytically:
+
+* **collapse of exploration** — identical selections by concurrent workers;
+  observable as low entropy of visited leaves,
+* **exploitation failure** — virtual loss repelling workers from the known
+  best branch; observable as regret vs. the exact optimum.
+
+Implicit heap indexing: ``child(n, a) = n * A + a + 1``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import Environment
+
+
+class BanditTreeState(NamedTuple):
+    node: jax.Array    # i32[] implicit node id
+    depth: jax.Array   # i32[]
+    done: jax.Array    # bool[]
+
+
+def _edge_reward(seed: int, node: jax.Array, action: jax.Array, num_actions: int):
+    """Deterministic per-edge reward in [0, 1), hashed from (node, action)."""
+    child = node * num_actions + action + 1
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), child)
+    return jax.random.uniform(key, (), jnp.float32)
+
+
+def make_bandit_tree(depth: int = 5, num_actions: int = 4, seed: int = 0) -> Environment:
+    def init(key: jax.Array) -> BanditTreeState:
+        del key
+        return BanditTreeState(jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+
+    def step(state: BanditTreeState, action: jax.Array):
+        action = jnp.asarray(action, jnp.int32)
+        r = _edge_reward(seed, state.node, action, num_actions)
+        child = state.node * num_actions + action + 1
+        new_depth = state.depth + 1
+        done = new_depth >= depth
+        # No-op after termination.
+        nxt = BanditTreeState(
+            node=jnp.where(state.done, state.node, child),
+            depth=jnp.where(state.done, state.depth, new_depth),
+            done=state.done | done,
+        )
+        r = jnp.where(state.done, 0.0, r)
+        return nxt, r, nxt.done
+
+    def observe(state: BanditTreeState) -> jax.Array:
+        return jnp.stack(
+            [state.node.astype(jnp.float32), state.depth.astype(jnp.float32)]
+        )
+
+    return Environment(
+        name=f"bandit_tree(d={depth},a={num_actions},seed={seed})",
+        num_actions=num_actions,
+        init=init,
+        step=step,
+        observe=observe,
+    )
+
+
+def solve_bandit_tree(
+    depth: int, num_actions: int, seed: int, gamma: float = 1.0
+) -> tuple[float, int, np.ndarray]:
+    """Exact DP solution: (optimal return, optimal first action, Q_root)."""
+    rng = jax.random.PRNGKey(seed)
+
+    def edge_r(node: int, action: int) -> float:
+        child = node * num_actions + action + 1
+        key = jax.random.fold_in(rng, child)
+        return float(jax.random.uniform(key, (), jnp.float32))
+
+    from functools import lru_cache
+
+    import sys
+
+    sys.setrecursionlimit(10000)
+
+    @lru_cache(maxsize=None)
+    def value(node: int, d: int) -> float:
+        if d >= depth:
+            return 0.0
+        return max(
+            edge_r(node, a) + gamma * value(node * num_actions + a + 1, d + 1)
+            for a in range(num_actions)
+        )
+
+    q_root = np.array(
+        [
+            edge_r(0, a) + gamma * value(a + 1, 1)
+            for a in range(num_actions)
+        ],
+        np.float64,
+    )
+    return float(q_root.max()), int(q_root.argmax()), q_root

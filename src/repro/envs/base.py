@@ -1,0 +1,44 @@
+"""Environment protocol used by every search algorithm in this repo.
+
+The MDP contract follows the paper (Sec. 2.1, footnote 2): the action space is
+finite and ``step`` is *deterministic given the state* — stochasticity is
+folded into a PRNG key carried inside the state, so that MCTS child states are
+well-defined (this is how the paper's production system handles the "high
+randomness" of the Joy City transitions).
+
+All callables must be jittable and vmappable; states are pytrees of arrays
+with static shapes so they can live in the tree's centralized state buffer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+StepFn = Callable[[Pytree, jax.Array], tuple[Pytree, jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """Bundle of pure functions describing one environment."""
+
+    name: str
+    num_actions: int
+    init: Callable[[jax.Array], Pytree]              # key -> state
+    step: StepFn                                     # (state, a) -> (state', r, done)
+    # Default (simulation) policy: key, state -> action.  Defaults to uniform;
+    # the Atari experiments plug a distilled policy network here (App. D).
+    rollout_policy: Optional[Callable[[jax.Array, Pytree], jax.Array]] = None
+    # Optional value bootstrap V(s) used to truncate simulations (App. D).
+    value_fn: Optional[Callable[[Pytree], jax.Array]] = None
+    # Optional observation extractor for policy/value networks.
+    observe: Optional[Callable[[Pytree], jax.Array]] = None
+
+    def policy(self, key: jax.Array, state: Pytree) -> jax.Array:
+        if self.rollout_policy is not None:
+            return self.rollout_policy(key, state)
+        return jax.random.randint(key, (), 0, self.num_actions, jnp.int32)

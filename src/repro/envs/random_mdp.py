@@ -1,0 +1,74 @@
+"""Tabular stochastic MDP (Garnet-style) with chance folded into the state key.
+
+Transitions are categorical draws from a fixed table; the draw consumes the
+PRNG key stored in the state, so ``step`` stays deterministic-given-state as
+the MCTS contract requires while the *environment* is genuinely stochastic —
+the same regime as the Joy City levels ("high randomness in the transition").
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Environment
+
+
+class RandomMDPState(NamedTuple):
+    s: jax.Array      # i32[] current tabular state
+    t: jax.Array      # i32[] timestep
+    key: jax.Array    # u32[2] chance key
+    done: jax.Array   # bool[]
+
+
+def make_random_mdp(
+    num_states: int = 32,
+    num_actions: int = 4,
+    horizon: int = 20,
+    branching: int = 4,
+    seed: int = 0,
+) -> Environment:
+    base = jax.random.PRNGKey(seed)
+    k_p, k_r, k_succ = jax.random.split(base, 3)
+    # Each (s, a) can land on `branching` successor states with dirichlet probs.
+    succ = jax.random.randint(
+        k_succ, (num_states, num_actions, branching), 0, num_states, jnp.int32
+    )
+    probs = jax.random.dirichlet(
+        k_p, jnp.ones((branching,)), (num_states, num_actions)
+    ).astype(jnp.float32)
+    rewards = jax.random.uniform(k_r, (num_states, num_actions), jnp.float32)
+
+    def init(key: jax.Array) -> RandomMDPState:
+        return RandomMDPState(
+            jnp.int32(0), jnp.int32(0), jax.random.fold_in(key, 7), jnp.bool_(False)
+        )
+
+    def step(state: RandomMDPState, action: jax.Array):
+        action = jnp.asarray(action, jnp.int32)
+        key, sub = jax.random.split(state.key)
+        branch = jax.random.categorical(sub, jnp.log(probs[state.s, action]))
+        s_next = succ[state.s, action, branch]
+        r = rewards[state.s, action]
+        t = state.t + 1
+        done = t >= horizon
+        nxt = RandomMDPState(
+            s=jnp.where(state.done, state.s, s_next),
+            t=jnp.where(state.done, state.t, t),
+            key=key,
+            done=state.done | done,
+        )
+        return nxt, jnp.where(state.done, 0.0, r), nxt.done
+
+    def observe(state: RandomMDPState) -> jax.Array:
+        return jax.nn.one_hot(state.s, num_states, dtype=jnp.float32)
+
+    return Environment(
+        name=f"random_mdp(s={num_states},a={num_actions},h={horizon})",
+        num_actions=num_actions,
+        init=init,
+        step=step,
+        observe=observe,
+    )

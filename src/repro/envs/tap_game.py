@@ -1,0 +1,179 @@
+"""Tap-elimination game — a faithful JAX analogue of the paper's "Joy City".
+
+Mechanics (App. C.1): a ``G×G`` grid of colored items; tapping a cell whose
+same-color connected region has size ≥ 2 eliminates the region; the remaining
+cells collapse downward (gravity) and empty cells at the top are refilled with
+random colors (the stochastic transition).  The goal is to eliminate a target
+count of the goal color within a step budget; the number of steps used ("game
+step") is the performance metric, exactly as in Sec. 5.1.
+
+Everything is jittable: flood fill is an iterated 4-neighbour dilation inside
+a ``lax.while_loop``; gravity is a stable per-column argsort; refill consumes
+the PRNG key carried in the state (so ``step`` is deterministic given state,
+as MCTS requires).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .base import Environment
+
+EMPTY = jnp.int8(-1)
+
+
+class TapGameState(NamedTuple):
+    grid: jax.Array        # i8[G, G]  (row 0 = top)
+    steps_left: jax.Array  # i32[]
+    goal_left: jax.Array   # i32[]  remaining goal-color cells to eliminate
+    key: jax.Array         # u32[2] chance key for refills
+    done: jax.Array        # bool[]
+
+
+def _flood_fill(grid: jax.Array, r: jax.Array, c: jax.Array) -> jax.Array:
+    """Boolean mask of the same-color connected region containing (r, c)."""
+    g = grid.shape[0]
+    color = grid[r, c]
+    same = (grid == color) & (grid != EMPTY)
+    seed = jnp.zeros_like(same).at[r, c].set(True) & same
+
+    def dilate(mask):
+        up = jnp.pad(mask[1:], ((0, 1), (0, 0)))
+        down = jnp.pad(mask[:-1], ((1, 0), (0, 0)))
+        left = jnp.pad(mask[:, 1:], ((0, 0), (0, 1)))
+        right = jnp.pad(mask[:, :-1], ((0, 0), (1, 0)))
+        return (mask | up | down | left | right) & same
+
+    def cond(carry):
+        mask, prev_n = carry
+        return jnp.sum(mask) != prev_n
+
+    def body(carry):
+        mask, _ = carry
+        return dilate(mask), jnp.sum(mask)
+
+    mask, _ = jax.lax.while_loop(cond, body, (seed, jnp.int32(-1)))
+    return mask
+
+
+def _gravity(grid: jax.Array) -> jax.Array:
+    """Compact non-empty cells downward per column (stable)."""
+    empty = grid == EMPTY
+    # Stable sort per column: False (non-empty) sorts before True, so we sort
+    # by `~empty` descending... we want empties first (top).  argsort of
+    # `empty` descending == empties on top.  Use stable argsort of (~empty).
+    order = jnp.argsort(~empty, axis=0, stable=True)  # empties (False) first
+    return jnp.take_along_axis(grid, order, axis=0)
+
+
+def _refill(grid: jax.Array, key: jax.Array, num_colors: int) -> jax.Array:
+    fresh = jax.random.randint(key, grid.shape, 0, num_colors, jnp.int8)
+    return jnp.where(grid == EMPTY, fresh, grid)
+
+
+def make_tap_game(
+    grid_size: int = 6,
+    num_colors: int = 4,
+    goal_color: int = 0,
+    goal_count: int = 12,
+    step_budget: int = 20,
+    refill: bool = True,
+) -> Environment:
+    g = grid_size
+
+    def init(key: jax.Array) -> TapGameState:
+        k_grid, k_state = jax.random.split(key)
+        grid = jax.random.randint(k_grid, (g, g), 0, num_colors, jnp.int8)
+        return TapGameState(
+            grid=grid,
+            steps_left=jnp.int32(step_budget),
+            goal_left=jnp.int32(goal_count),
+            key=k_state,
+            done=jnp.bool_(False),
+        )
+
+    def step(state: TapGameState, action: jax.Array):
+        action = jnp.asarray(action, jnp.int32)
+        r, c = action // g, action % g
+        mask = _flood_fill(state.grid, r, c)
+        size = jnp.sum(mask)
+        tapped_valid = (state.grid[r, c] != EMPTY) & (size >= 2)
+
+        eliminated = jnp.where(tapped_valid & mask, 1, 0)
+        goal_hit = jnp.sum(
+            eliminated * (state.grid == jnp.int8(goal_color)).astype(jnp.int32)
+        )
+        new_grid = jnp.where(tapped_valid & mask, EMPTY, state.grid)
+        new_grid = _gravity(new_grid)
+        key, k_fill = jax.random.split(state.key)
+        if refill:
+            new_grid = _refill(new_grid, k_fill, num_colors)
+
+        goal_left = jnp.maximum(state.goal_left - goal_hit, 0)
+        steps_left = state.steps_left - 1
+        won = goal_left == 0
+        done = won | (steps_left <= 0)
+
+        # Reward shaping: progress toward the goal, a small penalty per step
+        # (so fewer game steps = higher return, matching the paper's metric),
+        # and a terminal win bonus.
+        reward = (
+            goal_hit.astype(jnp.float32) / float(goal_count)
+            - 0.01
+            + jnp.where(won & ~state.done, 1.0, 0.0)
+        )
+        nxt = TapGameState(
+            grid=jnp.where(state.done, state.grid, new_grid),
+            steps_left=jnp.where(state.done, state.steps_left, steps_left),
+            goal_left=jnp.where(state.done, state.goal_left, goal_left),
+            key=key,
+            done=state.done | done,
+        )
+        return nxt, jnp.where(state.done, 0.0, reward), nxt.done
+
+    def rollout_policy(key: jax.Array, state: TapGameState) -> jax.Array:
+        """Greedy-ish default policy: prefer cells in large regions of the
+        goal color; cheap proxy — tap a random cell whose 4-neighbourhood
+        contains a same-color neighbour, biased toward the goal color."""
+        grid = state.grid
+        up = jnp.pad(grid[1:], ((0, 1), (0, 0)), constant_values=-2)
+        down = jnp.pad(grid[:-1], ((1, 0), (0, 0)), constant_values=-2)
+        left = jnp.pad(grid[:, 1:], ((0, 0), (0, 1)), constant_values=-2)
+        right = jnp.pad(grid[:, :-1], ((0, 0), (1, 0)), constant_values=-2)
+        has_pair = (
+            (grid == up) | (grid == down) | (grid == left) | (grid == right)
+        ) & (grid != EMPTY)
+        is_goal = grid == jnp.int8(goal_color)
+        logits = (
+            jnp.where(has_pair, 0.0, -1e9)
+            + jnp.where(is_goal, 2.0, 0.0)
+        ).reshape(-1)
+        # Fall back to uniform if no pair exists anywhere.
+        logits = jnp.where(
+            jnp.any(has_pair), logits, jnp.zeros_like(logits)
+        )
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    def observe(state: TapGameState) -> jax.Array:
+        onehot = jax.nn.one_hot(
+            state.grid.astype(jnp.int32), num_colors, dtype=jnp.float32
+        )
+        extras = jnp.stack(
+            [
+                state.steps_left.astype(jnp.float32) / step_budget,
+                state.goal_left.astype(jnp.float32) / goal_count,
+            ]
+        )
+        return jnp.concatenate([onehot.reshape(-1), extras])
+
+    return Environment(
+        name=f"tap_game(g={g},colors={num_colors})",
+        num_actions=g * g,
+        init=init,
+        step=step,
+        rollout_policy=rollout_policy,
+        observe=observe,
+    )

@@ -1,0 +1,97 @@
+"""Token-generation environment: WU-UCT searches over LM continuations.
+
+This is where the paper's technique meets the assigned architectures: the
+*simulation* step of MCTS is a policy-network rollout (exactly the paper's
+Atari setup, where a distilled PPO net drives simulations — App. D), with
+the policy network being any of the 10 assigned LMs served by the framework.
+
+State = (tokens so far, length); actions = the top-K tokens under the policy
+LM at the current position; reward = per-token log-likelihood under a target
+("reward") model — so the search maximizes target-model likelihood while
+being guided by the policy model.  Terminal at EOS or max length.
+
+The env recomputes forward passes per step (node states must be compact to
+live in the tree's state buffer); slot-level KV caching happens inside the
+serving engine when used at scale.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models import forward
+from ..models.config import ModelConfig
+from .base import Environment
+
+
+class TokenEnvState(NamedTuple):
+    tokens: jax.Array   # i32[max_len]
+    length: jax.Array   # i32[]
+    done: jax.Array     # bool[]
+
+
+def make_token_env(
+    policy_cfg: ModelConfig,
+    policy_params,
+    prompt: jax.Array,          # i32[P]
+    max_len: int = 64,
+    top_k: int = 8,
+    eos_token: int = 0,
+    reward_cfg: Optional[ModelConfig] = None,
+    reward_params=None,
+) -> Environment:
+    """Actions = ranks into the policy model's top-K at the current state."""
+    prompt_len = int(prompt.shape[0])
+    reward_cfg = reward_cfg or policy_cfg
+    reward_params = reward_params if reward_params is not None else policy_params
+
+    def _logits(params, cfg, tokens, length):
+        lg, _ = forward(params, cfg, {"tokens": tokens[None]})
+        return lg[0, length - 1]
+
+    def init(key: jax.Array) -> TokenEnvState:
+        del key
+        tokens = jnp.zeros((max_len,), jnp.int32)
+        tokens = tokens.at[:prompt_len].set(prompt)
+        return TokenEnvState(tokens, jnp.int32(prompt_len), jnp.bool_(False))
+
+    def step(state: TokenEnvState, action: jax.Array):
+        action = jnp.asarray(action, jnp.int32)
+        pol = _logits(policy_params, policy_cfg, state.tokens, state.length)
+        _, top_idx = jax.lax.top_k(pol, top_k)
+        token = top_idx[jnp.clip(action, 0, top_k - 1)]
+
+        rew_logits = _logits(reward_params, reward_cfg, state.tokens, state.length)
+        logp = jax.nn.log_softmax(rew_logits.astype(jnp.float32))[token]
+
+        new_tokens = state.tokens.at[state.length].set(token)
+        new_len = state.length + 1
+        done = (token == eos_token) | (new_len >= max_len)
+        nxt = TokenEnvState(
+            tokens=jnp.where(state.done, state.tokens, new_tokens),
+            length=jnp.where(state.done, state.length, new_len),
+            done=state.done | done,
+        )
+        reward = jnp.where(state.done, 0.0, logp)
+        return nxt, reward, nxt.done
+
+    def rollout_policy(key: jax.Array, state: TokenEnvState) -> jax.Array:
+        # Sample an action rank ∝ the policy's top-K probabilities.
+        pol = _logits(policy_params, policy_cfg, state.tokens, state.length)
+        top_vals, _ = jax.lax.top_k(pol, top_k)
+        return jax.random.categorical(key, top_vals).astype(jnp.int32)
+
+    def observe(state: TokenEnvState) -> jax.Array:
+        return state.tokens.astype(jnp.float32)
+
+    return Environment(
+        name=f"token_env({policy_cfg.name},k={top_k})",
+        num_actions=top_k,
+        init=init,
+        step=step,
+        rollout_policy=rollout_policy,
+        observe=observe,
+    )

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot-spots:
+#   flash_attention  — blockwise causal GQA attention (train/prefill)
+#   decode_attention — split-KV single-token decode w/ online LSE merge
+#   ssd_scan         — Mamba-2 SSD chunked scan with carried state
+#   tree_select      — fused UCB-score + masked argmax over children tables
+#                      (the paper's master-side selection hot-op, batched)
+# Each subpackage: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# wrapper with interpret/backend switch), ref.py (pure-jnp oracle).

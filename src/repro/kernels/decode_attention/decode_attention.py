@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a long KV cache.
+
+Decode is memory-bound (the whole valid KV prefix streams through VMEM once
+per token), so the kernel's job is to keep that stream dense: KV blocks of
+``block_k`` rows are brought in along a sequential grid axis while the
+online-softmax state (m, l, acc) for all q heads of one batch element stays
+resident in VMEM scratch.  Blocks entirely beyond ``kv_len`` are skipped —
+with a ring-buffer cache the skipped tail costs no HBM traffic.
+
+Layout: all q heads of one batch element are processed together
+([Hq, D] tile), so each KV block is read once per batch element rather than
+once per head — the GQA bandwidth saving that motivates grouped KV.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,    # [1] i32 (SMEM) — valid KV prefix length
+    q_ref,      # [Hq, D]
+    k_ref,      # [block_k, Hkv, D]
+    v_ref,      # [block_k, Hkv, D]
+    o_ref,      # [Hq, D]
+    m_scr,      # [Hq, 1] f32
+    l_scr,      # [Hq, 1] f32
+    acc_scr,    # [Hq, D] f32
+    *,
+    scale: float,
+    block_k: int,
+    n_kv: int,
+    group: int,
+):
+    ki = pl.program_id(1)
+    kv_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < kv_len)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                    # [Hq, D]
+        k = k_ref[...].astype(jnp.float32)                    # [bk, Hkv, D]
+        v = v_ref[...].astype(jnp.float32)
+        bk, hkv, dd = k.shape
+        hq = q.shape[0]
+        # scores[h, j] = q[h] · k[j, h // group]
+        kg = jnp.repeat(k, group, axis=1)                     # [bk, Hq, D]
+        s = jnp.einsum("hd,jhd->hj", q, kg) * scale           # [Hq, bk]
+        kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (hq, bk), 1
+        )
+        valid = kv_pos < kv_len
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vg = jnp.repeat(v, group, axis=1)                     # [bk, Hq, D]
+        acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("hj,jhd->hd", p, vg)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_scr[...] / jnp.maximum(l_scr[...], 1e-20)
+        ).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(
+    q: jax.Array,        # [B, Hq, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    kv_len: jax.Array,   # [] i32
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = hq // hkv
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    n_kv = s // block_k
+    scale = 1.0 / math.sqrt(d)
+    lens = jnp.full((1,), kv_len, jnp.int32)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, block_k=block_k, n_kv=n_kv, group=group
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, hq, d), lambda bi, ki: (bi, 0, 0)),
+            pl.BlockSpec((None, block_k, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, block_k, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, hq, d), lambda bi, ki: (bi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **(
+            {}
+            if interpret
+            else {
+                "compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+            }
+        ),
+    )(lens, q, k_cache, v_cache)
+    return out

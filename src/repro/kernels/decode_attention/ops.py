@@ -1,0 +1,21 @@
+"""Jit'd public wrapper for the decode attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .decode_attention import decode_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(
+    q, k_cache, v_cache, kv_len, *, block_k: int = 512,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return decode_attention_fwd(
+        q, k_cache, v_cache, kv_len, block_k=block_k, interpret=interpret
+    )

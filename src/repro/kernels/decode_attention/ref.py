@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for decode attention (thin wrapper over models.layers)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...models.layers import decode_attention as _ref
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len):
+    # models.layers.decode_attention takes [B, 1, Hq, D].
+    out = _ref(q[:, None], k_cache, v_cache, jnp.asarray(kv_len))
+    return out[:, 0]

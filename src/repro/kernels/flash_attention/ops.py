@@ -1,0 +1,24 @@
+"""Jit'd public wrapper: Pallas on TPU, interpret-mode validation on CPU."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .flash_attention import flash_attention_fwd
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, block_q: int = 256, block_k: int = 512,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_fwd(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # [B, Sq, Hq, D]
+    k: jax.Array,   # [B, Sk, Hkv, D]
+    v: jax.Array,   # [B, Sk, Hkv, D]
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    b, sq, hq, d = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, group, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, vf)
+    o = jnp.moveaxis(o.reshape(b, hq, sq, d), 1, 2)
+    return o.astype(q.dtype)

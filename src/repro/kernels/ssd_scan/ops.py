@@ -1,0 +1,16 @@
+"""Jit'd public wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .ssd_scan import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xdt, dA, Bmat, Cmat, *, chunk: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_scan_fwd(xdt, dA, Bmat, Cmat, chunk=chunk, interpret=interpret)

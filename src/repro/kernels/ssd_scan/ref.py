@@ -1,0 +1,14 @@
+"""Oracles for the SSD scan kernel: the chunked jnp path used by the model
+and the O(S) sequential recurrence (ground truth)."""
+
+from ...models.ssm import ssd_chunked, ssd_sequential_ref
+
+
+def ssd_ref_chunked(xdt, dA, Bmat, Cmat, chunk=256):
+    y, _ = ssd_chunked(xdt, dA, Bmat, Cmat, chunk)
+    return y
+
+
+def ssd_ref_sequential(xdt, dA, Bmat, Cmat):
+    y, _ = ssd_sequential_ref(xdt, dA, Bmat, Cmat)
+    return y

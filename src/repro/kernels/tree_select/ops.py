@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the batched tree-selection kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .tree_select import tree_select_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "block_b", "interpret"))
+def tree_select(
+    n_c, o_c, v_c, n_p, o_p, valid, *, beta: float = 1.0, block_b: int = 256,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return tree_select_fwd(
+        n_c, o_c, v_c, n_p, o_p, valid,
+        beta=beta, block_b=block_b, interpret=interpret,
+    )

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the batched WU-UCT selection kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def tree_select_ref(n_c, o_c, v_c, n_p, o_p, valid, beta: float = 1.0):
+    n_c = n_c.astype(jnp.float32)
+    o_c = o_c.astype(jnp.float32)
+    v_c = v_c.astype(jnp.float32)
+    log_term = jnp.log(jnp.maximum(n_p + o_p, 1.0))[:, None]
+    denom = n_c + o_c
+    explore = beta * jnp.sqrt(2.0 * log_term / jnp.maximum(denom, 1e-9))
+    score = v_c + jnp.where(denom > 0, explore, jnp.inf)
+    score = jnp.where(valid, score, -1e30)
+    return jnp.argmax(score, axis=1).astype(jnp.int32), jnp.max(score, axis=1)

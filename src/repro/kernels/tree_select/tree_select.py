@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused WU-UCT selection over batched children tables.
+
+The paper's master-side hot op is eq. (4):
+
+    a = argmax_a  V'_a + β·sqrt(2·log(N_p + O_p) / (N'_a + O'_a))
+
+For batched search (many trees / many nodes per wave — the throughput mode of
+this framework), the statistics of all children of B nodes are gathered into
+dense [B, A] tables and this kernel fuses score computation + masked argmax
+in one VMEM pass, instead of materializing scores and running a separate
+argmax reduction.  One program handles a [block_b, A] tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _select_kernel(
+    nc_ref,     # [block_b, A] child N
+    oc_ref,     # [block_b, A] child O
+    vc_ref,     # [block_b, A] child V
+    np_ref,     # [block_b, 1] parent N
+    op_ref,     # [block_b, 1] parent O
+    valid_ref,  # [block_b, A] i32 mask
+    act_ref,    # [block_b, 1] i32 out — argmax action
+    score_ref,  # [block_b, 1] f32 out — best score
+    *,
+    beta: float,
+):
+    nc = nc_ref[...].astype(jnp.float32)
+    oc = oc_ref[...].astype(jnp.float32)
+    vc = vc_ref[...].astype(jnp.float32)
+    n_p = np_ref[...].astype(jnp.float32)
+    o_p = op_ref[...].astype(jnp.float32)
+    valid = valid_ref[...] != 0
+
+    log_term = jnp.log(jnp.maximum(n_p + o_p, 1.0))           # [bb, 1]
+    denom = nc + oc
+    explore = beta * jnp.sqrt(2.0 * log_term / jnp.maximum(denom, 1e-9))
+    score = vc + jnp.where(denom > 0, explore, jnp.inf)
+    score = jnp.where(valid, score, NEG_INF)
+
+    best = jnp.max(score, axis=1, keepdims=True)              # [bb, 1]
+    bb, a = score.shape
+    idx = jax.lax.broadcasted_iota(jnp.int32, (bb, a), 1)
+    # first argmax: smallest index achieving the max
+    cand = jnp.where(score == best, idx, a)
+    act_ref[...] = jnp.min(cand, axis=1, keepdims=True).astype(jnp.int32)
+    score_ref[...] = best
+
+
+def tree_select_fwd(
+    n_c: jax.Array,     # [B, A]
+    o_c: jax.Array,     # [B, A]
+    v_c: jax.Array,     # [B, A]
+    n_p: jax.Array,     # [B]
+    o_p: jax.Array,     # [B]
+    valid: jax.Array,   # [B, A] bool
+    *,
+    beta: float = 1.0,
+    block_b: int = 256,
+    interpret: bool = True,
+):
+    b, a = n_c.shape
+    block_b = min(block_b, b)
+    assert b % block_b == 0
+    kernel = functools.partial(_select_kernel, beta=beta)
+    act, score = pl.pallas_call(
+        kernel,
+        grid=(b // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, a), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, a), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, a), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, a), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        n_c,
+        o_c,
+        v_c,
+        n_p.reshape(b, 1),
+        o_p.reshape(b, 1),
+        valid.astype(jnp.int32),
+    )
+    return act[:, 0], score[:, 0]

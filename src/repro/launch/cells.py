@@ -1,0 +1,250 @@
+"""(architecture × input-shape) cell definitions for the dry-run + roofline.
+
+Each LM cell builds:
+  * a step function (``train_step`` for train shapes, ``prefill``/``serve``
+    for inference shapes),
+  * allocation-free ShapeDtypeStruct argument specs (params, optimizer
+    state, caches, batches),
+  * in/out shardings for the production mesh.
+
+``long_500k`` runs only for sub-quadratic archs (ssm/hybrid) per the
+assignment; the skip is recorded, not silent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, list_archs
+from ..distributed.sharding import (
+    batch_spec,
+    opt_state_shardings,
+    param_partition_specs,
+    param_shardings,
+)
+from ..models import abstract_params, decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+from ..training.optimizer import AdamWConfig, AdamWState
+from ..training.train_step import TrainConfig, make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str
+    fn: Any                      # callable to lower
+    arg_specs: tuple             # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    model_cfg: ModelConfig
+    tokens_per_step: int         # for MODEL_FLOPS bookkeeping
+
+
+def skip_reason(arch: str, shape: str) -> Optional[str]:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return (
+            "full-attention arch: long_500k requires sub-quadratic attention "
+            "(assignment rule; see DESIGN.md §Arch-applicability)"
+        )
+    return None
+
+
+def _pad_experts(cfg: ModelConfig, tp: int) -> ModelConfig:
+    """Pad routed experts to a multiple of the TP size for EP divisibility."""
+    if cfg.family != "moe" or cfg.num_experts % tp == 0:
+        return cfg
+    padded = ((cfg.num_experts + tp - 1) // tp) * tp
+    return dataclasses.replace(
+        cfg, num_experts=padded, num_experts_real=cfg.num_experts
+    )
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def _batch_specs(cfg: ModelConfig, batch_size: int, seq_len: int) -> dict:
+    batch: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        text = seq_len - cfg.num_patches
+        batch["tokens"] = jax.ShapeDtypeStruct((batch_size, text), jnp.int32)
+        batch["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.num_patches, cfg.d_model), cfg.dtype
+        )
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.encoder_seq, cfg.d_model), cfg.dtype
+        )
+    return batch
+
+
+def _cache_shardings(cfg: ModelConfig, cache_abs, mesh, *, kv_mode: str):
+    """KV cache placement:
+
+    * ``batch``      — B over data axes (default decode/prefill),
+    * ``seq_data``   — S over data (batch=1 long-context SP decode),
+    * ``batch+seq_model`` — B over data AND S over model: split-KV decode
+      (flash-decoding): each model shard reduces its S/16 slice, merged by a
+      tiny LSE psum — the decode-cell hillclimb.
+    """
+    dp = batch_spec(mesh)
+
+    def spec_for(path_key: str, leaf):
+        nd = len(leaf.shape)
+        if path_key.endswith("len"):
+            return P()
+        if "cross" in path_key:
+            # enc-dec cross KV is short (1500 frames) and rarely divides the
+            # model axis — batch-shard only.
+            return P(None, dp[0] if dp else None, None, None, None)
+        if "kv" in path_key:
+            # [L(or sites), B, S, H, D]
+            if kv_mode == "seq_data":
+                return P(None, None, dp[0] if dp else None, None, None)
+            if kv_mode == "batch+seq_model":
+                return P(None, dp[0] if dp else None, "model", None, None)
+            if kv_mode == "seq_all":
+                # batch=1 long-context: S over EVERY mesh axis.
+                axes = tuple(a for a in ("pod", "data", "model")
+                             if a in mesh.axis_names)
+                return P(None, None, axes, None, None)
+            return P(None, dp[0] if dp else None, None, None, None)
+        if "ssm" in path_key:
+            # conv: [L, B, K-1, C] / state: [L, B, H, P, N]
+            entries = [None] * nd
+            if kv_mode not in ("seq_data", "seq_all"):
+                entries[1] = dp[0] if dp else None
+            return P(*entries)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", p)) for p in path)
+        out.append(NamedSharding(mesh, spec_for(key, leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build_cell(
+    arch: str,
+    shape: str,
+    mesh: Mesh,
+    cfg_overrides: Optional[dict] = None,
+    strategy: str = "tp",
+    kv_mode: Optional[str] = None,
+) -> Cell:
+    reason = skip_reason(arch, shape)
+    if reason is not None:
+        raise ValueError(f"cell ({arch}, {shape}) skipped: {reason}")
+    spec = SHAPES[shape]
+    tp = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    cfg = _pad_experts(get_config(arch), tp)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    gb, sl = spec["global_batch"], spec["seq_len"]
+    if kv_mode is None:
+        kv_mode = "seq_data" if shape == "long_500k" else "batch"
+
+    params_abs = abstract_params(cfg)
+    pshard = param_shardings(cfg, params_abs, mesh, strategy)
+    dp = batch_spec(mesh, strategy, gb)
+
+    if spec["kind"] == "train":
+        opt_abs = jax.eval_shape(
+            lambda p: AdamWState(
+                step=jnp.int32(0),
+                m=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                v=jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p),
+                master=jax.tree.map(lambda x: x.astype(jnp.float32), p),
+            ),
+            params_abs,
+        )
+        oshard = opt_state_shardings(cfg, params_abs, mesh, opt_abs, strategy)
+        batch_abs = _batch_specs(cfg, gb, sl)
+        bshard = jax.tree.map(lambda _: NamedSharding(mesh, dp), batch_abs)
+        step = make_train_step(cfg, TrainConfig())
+        metrics_shard = None  # let the partitioner place scalars
+        return Cell(
+            arch=arch,
+            shape=shape,
+            kind="train",
+            fn=step,
+            arg_specs=(params_abs, opt_abs, batch_abs),
+            in_shardings=(pshard, oshard, bshard),
+            out_shardings=(pshard, oshard, metrics_shard),
+            model_cfg=cfg,
+            tokens_per_step=gb * sl,
+        )
+
+    if spec["kind"] == "prefill":
+        cache_abs = jax.eval_shape(lambda: init_cache(cfg, gb, sl))
+        cshard = _cache_shardings(cfg, cache_abs, mesh, kv_mode=kv_mode)
+        batch_abs = _batch_specs(cfg, gb, sl)
+        bshard = jax.tree.map(lambda _: NamedSharding(mesh, dp), batch_abs)
+
+        def prefill_fn(params, batch, cache):
+            return prefill(params, cfg, batch, cache)
+
+        return Cell(
+            arch=arch,
+            shape=shape,
+            kind="prefill",
+            fn=prefill_fn,
+            arg_specs=(params_abs, batch_abs, cache_abs),
+            in_shardings=(pshard, bshard, cshard),
+            out_shardings=(NamedSharding(mesh, dp), cshard),
+            model_cfg=cfg,
+            tokens_per_step=gb * sl,
+        )
+
+    # decode: one new token against a seq_len-deep cache.
+    cache_abs = jax.eval_shape(lambda: init_cache(cfg, gb, sl))
+    # pretend the cache is full up to sl-1
+    cache_abs = dict(cache_abs, len=jax.ShapeDtypeStruct((), jnp.int32))
+    cshard = _cache_shardings(cfg, cache_abs, mesh, kv_mode=kv_mode)
+    token_abs = jax.ShapeDtypeStruct((gb,), jnp.int32)
+    tshard = NamedSharding(
+        mesh, dp if kv_mode not in ("seq_data", "seq_all") else P()
+    )
+
+    def decode_fn(params, token, cache):
+        return decode_step(params, cfg, token, cache)
+
+    return Cell(
+        arch=arch,
+        shape=shape,
+        kind="decode",
+        fn=decode_fn,
+        arg_specs=(params_abs, token_abs, cache_abs),
+        in_shardings=(pshard, tshard, cshard),
+        out_shardings=(tshard, cshard),
+        model_cfg=cfg,
+        tokens_per_step=gb,
+    )
+
+
+def all_cells() -> list[tuple[str, str, Optional[str]]]:
+    """Every (arch, shape) with its skip reason (None = runnable)."""
+    out = []
+    for arch in list_archs():
+        for shape in SHAPES:
+            out.append((arch, shape, skip_reason(arch, shape)))
+    return out

@@ -1,0 +1,76 @@
+"""Search launcher: WU-UCT (or any baseline) on any registered environment.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.search --env tap --algo wu_uct \
+      --workers 16 --simulations 128 --episodes 2
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import make_algorithm, make_config, play_episode
+from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
+
+
+def make_env(name: str):
+    return {
+        "tap": lambda: make_tap_game(grid_size=6, num_colors=4, goal_count=10,
+                                     step_budget=20),
+        "tap_hard": lambda: make_tap_game(grid_size=7, num_colors=5,
+                                          goal_count=14, step_budget=30),
+        "bandit": lambda: make_bandit_tree(depth=6, num_actions=4),
+        "mdp": lambda: make_random_mdp(num_states=32, num_actions=4, horizon=16),
+    }[name]()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--env", default="tap",
+                    choices=["tap", "tap_hard", "bandit", "mdp"])
+    ap.add_argument("--algo", default="wu_uct",
+                    choices=["wu_uct", "uct", "treep", "treep_vc", "leafp", "rootp"])
+    ap.add_argument("--workers", type=int, default=16)
+    ap.add_argument("--simulations", type=int, default=128)
+    ap.add_argument("--episodes", type=int, default=2)
+    ap.add_argument("--max-depth", type=int, default=10)
+    ap.add_argument("--width", type=int, default=5)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    env = make_env(args.env)
+    cfg = make_config(
+        args.algo,
+        num_simulations=args.simulations,
+        wave_size=1 if args.algo == "uct" else args.workers,
+        max_depth=args.max_depth,
+        max_sim_steps=20,
+        max_width=min(args.width, env.num_actions),
+        gamma=0.99,
+    )
+    searcher = make_algorithm(args.algo, env, cfg)
+    rets, steps = [], []
+    for ep in range(args.episodes):
+        t0 = time.time()
+        ret, moves, done = play_episode(
+            env, cfg, jax.random.PRNGKey(args.seed + ep), max_moves=32,
+            searcher=searcher,
+        )
+        rets.append(ret)
+        steps.append(moves)
+        print(
+            f"episode {ep}: return={ret:.3f} game_steps={moves} done={done} "
+            f"wall={time.time() - t0:.1f}s"
+        )
+    print(
+        f"\n{args.algo} W={args.workers}: return={np.mean(rets):.3f}"
+        f"±{np.std(rets):.3f} game_steps={np.mean(steps):.1f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

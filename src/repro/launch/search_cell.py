@@ -1,0 +1,139 @@
+"""Dry-run cell for the paper's technique itself: one WU-UCT wave step on
+the production mesh.
+
+Maps the master–worker architecture onto the mesh exactly as DESIGN.md §2
+describes:
+
+* tree statistics + master bookkeeping (phases 1/3): replicated — zero
+  communication by determinism;
+* the wave of in-flight simulation slots (phase 2): sharded over the
+  ``(pod, data)`` axes (`with_sharding_constraint` on every slot-indexed
+  tensor);
+* the rollout policy network: a tap-game policy MLP tensor-sharded over
+  ``model`` — the same TP machinery the LM cells use, exercised inside the
+  vmapped simulation loop.
+
+``jit(search_wave).lower(...).compile()`` succeeding on the 256/512-chip
+meshes proves the paper's parallelization scheme is coherent at pod scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core import tree as tree_lib
+from ..core.wu_uct import (
+    SearchConfig,
+    _phase1_select,
+    _phase2_work,
+    _phase3_settle,
+)
+from ..core.baselines import make_config
+from ..distributed.sharding import data_axes
+from ..envs import Environment, make_tap_game
+
+
+def _policy_net_env(base_env: Environment, params) -> Environment:
+    """Tap env whose default policy is an MLP over observations (the role the
+    distilled PPO net plays in the paper's Atari setup)."""
+
+    def rollout_policy(key, state):
+        obs = base_env.observe(state)
+        h = jax.nn.relu(obs @ params["w1"] + params["b1"])
+        logits = h @ params["w2"]
+        return jax.random.categorical(key, logits).astype(jnp.int32)
+
+    return Environment(
+        name=base_env.name + "+mlp",
+        num_actions=base_env.num_actions,
+        init=base_env.init,
+        step=base_env.step,
+        rollout_policy=rollout_policy,
+        observe=base_env.observe,
+    )
+
+
+class SearchCell(NamedTuple):
+    fn: object
+    arg_specs: tuple
+    in_shardings: tuple
+    out_shardings: object
+    cfg: SearchConfig
+
+
+def build_search_cell(
+    mesh: Mesh,
+    wave_size: int = 256,
+    num_simulations: int = 1024,
+    d_mlp: int = 8192,
+) -> SearchCell:
+    base_env = make_tap_game(grid_size=6, num_colors=4, goal_count=12,
+                             step_budget=20)
+    obs_dim = int(base_env.observe(base_env.init(jax.random.PRNGKey(0))).shape[0])
+    cfg = make_config(
+        "wu_uct",
+        num_simulations=num_simulations,
+        wave_size=wave_size,
+        max_depth=10,
+        max_sim_steps=20,
+        max_width=5,
+        gamma=1.0,
+    )
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def constrain_slots(tree_args):
+        def per_leaf(x):
+            if not hasattr(x, "ndim") or x.ndim == 0 or x.shape[0] != wave_size:
+                return x
+            spec = P(dp_spec, *([None] * (x.ndim - 1)))
+            return jax.lax.with_sharding_constraint(x, spec)
+
+        return jax.tree.map(per_leaf, tree_args)
+
+    def search_wave(params, tree, rng):
+        env = _policy_net_env(base_env, params)
+        rng, k_sel, k_sim = jax.random.split(rng, 3)
+        tree, slots, _ = _phase1_select(tree, k_sel, cfg)
+        child_states, r_edge, done_child, rets = _phase2_work(
+            env, cfg, tree, slots, k_sim, constrain=constrain_slots
+        )
+        tree = _phase3_settle(
+            tree, cfg, slots, child_states, r_edge, done_child, rets
+        )
+        return tree
+
+    # Abstract arguments.
+    params_abs = {
+        "w1": jax.ShapeDtypeStruct((obs_dim, d_mlp), jnp.bfloat16),
+        "b1": jax.ShapeDtypeStruct((d_mlp,), jnp.bfloat16),
+        "w2": jax.ShapeDtypeStruct((d_mlp, base_env.num_actions), jnp.bfloat16),
+    }
+    capacity = num_simulations + wave_size + 1
+    tree_abs = jax.eval_shape(
+        lambda: tree_lib.init_tree(
+            base_env.init(jax.random.PRNGKey(0)), capacity, base_env.num_actions
+        )
+    )
+    rng_abs = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    pshard = {
+        "w1": NamedSharding(mesh, P(None, "model")),
+        "b1": NamedSharding(mesh, P("model")),
+        "w2": NamedSharding(mesh, P("model", None)),
+    }
+    replicated = NamedSharding(mesh, P())
+    tshard = jax.tree.map(lambda _: replicated, tree_abs)
+
+    return SearchCell(
+        fn=search_wave,
+        arg_specs=(params_abs, tree_abs, rng_abs),
+        in_shardings=(pshard, tshard, replicated),
+        out_shardings=tshard,
+        cfg=cfg,
+    )

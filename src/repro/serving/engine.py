@@ -1,0 +1,127 @@
+"""Batched serving engine: slot-based continuous batching over decode_step.
+
+The engine owns ``B`` request slots.  Incoming prompts are prefilling into
+free slots (left-padded batch prefill); every tick runs one fused
+``decode_step`` for all active slots; finished sequences (EOS / max length)
+free their slot immediately — the serving-side analogue of the WU-UCT
+async-slot scheduler (no slot ever waits for the longest request).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import decode_step, init_cache, prefill
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_slots: int = 8
+    max_len: int = 512
+    temperature: float = 0.0     # 0 = greedy
+    eos_token: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self.cache = init_cache(cfg, serve_cfg.batch_slots, serve_cfg.max_len)
+        b = serve_cfg.batch_slots
+        self.active = np.zeros(b, bool)
+        self.lengths = np.zeros(b, np.int32)
+        self.outputs: list[list[int]] = [[] for _ in range(b)]
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, cfg, t, c)
+        )
+        self._last_tokens = np.zeros(b, np.int32)
+
+    # NOTE: the simple engine prefils one request at a time (slot-local
+    # cache update); a production engine batches prefill — the dry-run's
+    # prefill_32k cell exercises that path.
+    def add_request(self, prompt_tokens: list[int]) -> Optional[int]:
+        free = np.flatnonzero(~self.active)
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        cfg, sc = self.cfg, self.sc
+        cache1 = init_cache(cfg, 1, sc.max_len)
+        batch = {"tokens": jnp.asarray(prompt_tokens, jnp.int32)[None]}
+        logits, cache1 = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))(
+            self.params, batch, cache1
+        )
+        # splice the slot-local cache into the batch cache
+        def splice(full, one):
+            if full.ndim == 0 or one.ndim == 0:
+                return full
+            # layer-stacked arrays: batch dim is axis 1
+            return full.at[:, slot].set(one[:, 0])
+
+        self.cache = jax.tree.map(
+            lambda f, o: splice(f, o) if hasattr(f, "ndim") and f.ndim > 1 else f,
+            self.cache,
+            cache1,
+        )
+        tok = int(jnp.argmax(logits[0]))
+        self.active[slot] = True
+        self.lengths[slot] = len(prompt_tokens)
+        # Per-slot cache lengths (vector `len`): each slot decodes at its own
+        # position — the continuous-batching requirement.
+        self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
+        self.outputs[slot] = [tok]
+        self._last_tokens[slot] = tok
+        return slot
+
+    def step(self, rng: Optional[jax.Array] = None) -> dict[int, int]:
+        """One decode tick for all active slots; returns {slot: new_token}."""
+        if not self.active.any():
+            return {}
+        tokens = jnp.asarray(self._last_tokens, jnp.int32)
+        self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
+        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        if self.sc.temperature > 0 and rng is not None:
+            toks = jax.random.categorical(rng, logits / self.sc.temperature)
+        else:
+            toks = jnp.argmax(logits, axis=-1)
+        toks = np.asarray(toks, np.int32)
+        emitted = {}
+        for slot in np.flatnonzero(self.active):
+            t = int(toks[slot])
+            emitted[int(slot)] = t
+            self.outputs[slot].append(t)
+            self._last_tokens[slot] = t
+            self.lengths[slot] += 1
+            if t == self.sc.eos_token or self.lengths[slot] >= self.sc.max_len - 1:
+                self.active[slot] = False
+        return emitted
+
+    def run(self, prompts: list[list[int]], max_ticks: int = 256):
+        """Serve a list of prompts to completion; returns outputs per prompt."""
+        pending = list(enumerate(prompts))
+        slot_to_req: dict[int, int] = {}
+        results: dict[int, list[int]] = {}
+        ticks = 0
+        while (pending or self.active.any()) and ticks < max_ticks:
+            while pending:
+                req_id, prompt = pending[0]
+                slot = self.add_request(prompt)
+                if slot is None:
+                    break
+                slot_to_req[slot] = req_id
+                pending.pop(0)
+            before = self.active.copy()
+            self.step()
+            ticks += 1
+            for slot in np.flatnonzero(before & ~self.active):
+                results[slot_to_req[int(slot)]] = list(self.outputs[int(slot)])
+        for slot, req in slot_to_req.items():
+            if req not in results:
+                results[req] = list(self.outputs[slot])
+        return [results.get(i, []) for i in range(len(prompts))]

@@ -1,0 +1,17 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from .train_step import TrainConfig, make_train_step
+from .data import SyntheticStream, PackedShards, write_token_shards
+from .checkpoint import CheckpointManager
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "TrainConfig",
+    "make_train_step",
+    "SyntheticStream",
+    "PackedShards",
+    "write_token_shards",
+    "CheckpointManager",
+]

@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Every assigned arch instantiates a REDUCED same-family config and runs one
+forward + one train step on CPU, asserting output shapes and no NaNs.  The
+FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see tests/test_dryrun_small.py and launch/dryrun.py.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced, list_archs
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.training import AdamWConfig, TrainConfig, adamw_init, make_train_step
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, b=2, s=24):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (b, cfg.num_patches, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "encdec":
+        batch["frame_embeds"] = jax.random.normal(
+            key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assignment dimensions."""
+    cfg = get_config(arch)
+    expected = {
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 151936),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 151936),
+        "llama3-8b": (32, 4096, 32, 8, 128256),
+        "phi3-medium-14b": (40, 5120, 40, 10, 100352),
+        "deepseek-67b": (95, 8192, 64, 8, 102400),
+        "qwen2.5-32b": (64, 5120, 40, 8, 152064),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 32000),
+        "zamba2-7b": (81, 3584, 32, 32, 32000),
+        "mamba2-2.7b": (64, 2560, 0, 0, 50280),
+        "whisper-small": (12, 768, 12, 12, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    # family-specific extras
+    if arch == "qwen2-moe-a2.7b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (60, 4)
+    if arch == "qwen3-moe-235b-a22b":
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == (128, 8)
+    if arch in ("mamba2-2.7b",):
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-7b":
+        assert cfg.ssm_state == 64 and cfg.attn_every > 0
+    if arch == "whisper-small":
+        assert cfg.num_encoder_layers == 12
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    logits, aux = jax.jit(lambda p, b: forward(p, cfg, b))(params, batch)
+    b, s = batch["tokens"].shape
+    extra = cfg.num_patches if cfg.family == "vlm" else 0
+    assert logits.shape == (b, s + extra, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10))
+    step = jax.jit(make_train_step(cfg, tc))
+    opt = adamw_init(params)
+    params2, _, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    diffs = [
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2))
+    ]
+    assert max(diffs) > 0
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["llama3-8b", "qwen2-moe-a2.7b", "mamba2-2.7b", "zamba2-7b",
+     "whisper-small", "llava-next-mistral-7b"],
+)
+def test_prefill_decode_matches_forward(arch):
+    """Serving path (prefill + N decode steps) == full forward, per family."""
+    cfg = get_reduced(arch)
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)  # no token drops
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    b, s, extra_steps, max_len = 2, 16, 3, 32
+    toks = jax.random.randint(key, (b, s + extra_steps), 0, cfg.vocab_size)
+    full = _batch(cfg, key)
+    full["tokens"] = toks
+    pref = dict(full, tokens=toks[:, :s])
+
+    logits_full, _ = jax.jit(lambda p, bb: forward(p, cfg, bb))(params, full)
+    off = cfg.num_patches if cfg.family == "vlm" else 0
+
+    cache = init_cache(cfg, b, max_len)
+    lg, cache = jax.jit(lambda p, bb, c: prefill(p, cfg, bb, c))(params, pref, cache)
+    np.testing.assert_allclose(
+        np.asarray(lg, np.float32),
+        np.asarray(logits_full[:, off + s - 1, :], np.float32),
+        rtol=1e-4, atol=1e-4,
+    )
+    dstep = jax.jit(lambda p, t, c: decode_step(p, cfg, t, c))
+    for i in range(extra_steps):
+        lg, cache = dstep(params, toks[:, s + i], cache)
+        np.testing.assert_allclose(
+            np.asarray(lg, np.float32),
+            np.asarray(logits_full[:, off + s + i, :], np.float32),
+            rtol=1e-4, atol=1e-4,
+        )

@@ -1,0 +1,72 @@
+"""Async-slot engine (Algorithm 1 port): correctness + straggler overlap."""
+
+import jax
+import numpy as np
+
+from repro.core import make_config, make_async_searcher
+from repro.envs import make_bandit_tree, make_tap_game
+from repro.envs.bandit_tree import solve_bandit_tree
+
+
+def test_async_finds_optimum_and_counts_complete():
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    _, opt_a, _ = solve_bandit_tree(4, 4, 0, gamma=1.0)
+    cfg = make_config(
+        "wu_uct", num_simulations=128, wave_size=16, max_depth=8,
+        max_sim_steps=8, max_width=4, gamma=1.0,
+    )
+    search = make_async_searcher(env, cfg)
+    state = env.init(jax.random.PRNGKey(0))
+    hits, total_n = 0, []
+    for t in range(4):
+        res = search(state, jax.random.PRNGKey(t))
+        hits += int(res.action) == opt_a
+        total_n.append(float(np.asarray(res.root_n).sum()))
+    assert hits >= 3
+    # Every launched rollout completes.  A few early rollouts legitimately
+    # simulate from the root itself (all children pending in the first fill),
+    # so child visits sum to T minus at most ~2W root-sims.
+    T, W = cfg.num_simulations, cfg.wave_size
+    assert all(T - 2 * W <= n <= T for n in total_n), total_n
+
+
+def test_async_overlaps_heterogeneous_rollouts():
+    """Straggler mitigation: with 16 slots and rollouts of length ≤ 8, the
+    master must finish 128 simulations in far fewer ticks than the serial
+    128·len bound — and fewer than (waves × max_len) a barrier schedule
+    would need if every wave waited for the longest rollout."""
+    env = make_bandit_tree(depth=6, num_actions=3, seed=1)
+    cfg = make_config(
+        "wu_uct", num_simulations=128, wave_size=16, max_depth=8,
+        max_sim_steps=8, max_width=3, gamma=1.0,
+    )
+    search = make_async_searcher(env, cfg)
+    state = env.init(jax.random.PRNGKey(0))
+    res = search(state, jax.random.PRNGKey(0))
+    ticks = float(res.max_o)  # repurposed diagnostic: master ticks
+    waves_barrier_bound = (128 // 16) * (cfg.max_sim_steps + 1)
+    assert ticks < waves_barrier_bound, (ticks, waves_barrier_bound)
+
+
+def test_async_matches_wave_engine_quality():
+    """Both engines implement the same statistics; their root visit
+    distributions must broadly agree on an easy problem."""
+    from repro.core import make_searcher
+
+    env = make_tap_game(grid_size=5, num_colors=3, goal_count=6, step_budget=14)
+    cfg = make_config(
+        "wu_uct", num_simulations=64, wave_size=8, max_depth=8,
+        max_sim_steps=12, max_width=5, gamma=1.0,
+    )
+    state = env.init(jax.random.PRNGKey(0))
+    wave = make_searcher(env, cfg)(state, jax.random.PRNGKey(1))
+    asy = make_async_searcher(env, cfg)(state, jax.random.PRNGKey(1))
+    n_w = np.asarray(wave.root_n)
+    n_a = np.asarray(asy.root_n)
+    # Top action sets overlap (not exact equality — schedules differ).
+    top_w = set(np.argsort(n_w)[-3:])
+    top_a = set(np.argsort(n_a)[-3:])
+    assert len(top_w & top_a) >= 1
+    T, W = cfg.num_simulations, cfg.wave_size
+    assert T - 2 * W <= n_w.sum() <= T
+    assert T - 2 * W <= n_a.sum() <= T

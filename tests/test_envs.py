@@ -1,0 +1,126 @@
+"""Environment invariants (tap game mechanics + MDP contract)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
+from repro.envs.tap_game import EMPTY, _flood_fill, _gravity
+
+
+# ---------------------------------------------------------------------------
+# Flood fill / gravity unit properties
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    g=st.integers(min_value=3, max_value=7),
+    colors=st.integers(min_value=2, max_value=5),
+)
+def test_flood_fill_is_connected_same_color(seed, g, colors):
+    key = jax.random.PRNGKey(seed)
+    grid = jax.random.randint(key, (g, g), 0, colors, jnp.int8)
+    r, c = int(jax.random.randint(jax.random.fold_in(key, 1), (), 0, g)), int(
+        jax.random.randint(jax.random.fold_in(key, 2), (), 0, g)
+    )
+    mask = np.asarray(_flood_fill(grid, jnp.int32(r), jnp.int32(c)))
+    grid = np.asarray(grid)
+    color = grid[r, c]
+    assert mask[r, c]
+    # Same color everywhere in the mask.
+    assert (grid[mask] == color).all()
+    # Connectivity: BFS from (r, c) over same-color cells == mask.
+    seen = np.zeros_like(mask)
+    stack = [(r, c)]
+    seen[r, c] = True
+    while stack:
+        i, j = stack.pop()
+        for di, dj in ((1, 0), (-1, 0), (0, 1), (0, -1)):
+            ni, nj = i + di, j + dj
+            if 0 <= ni < g and 0 <= nj < g and not seen[ni, nj] and grid[ni, nj] == color:
+                seen[ni, nj] = True
+                stack.append((ni, nj))
+    np.testing.assert_array_equal(mask, seen)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_gravity_no_floating_cells_and_conserves(seed):
+    key = jax.random.PRNGKey(seed)
+    g = 6
+    grid = jax.random.randint(key, (g, g), 0, 4, jnp.int8)
+    holes = jax.random.uniform(jax.random.fold_in(key, 1), (g, g)) < 0.4
+    grid = jnp.where(holes, EMPTY, grid)
+    out = np.asarray(_gravity(grid))
+    grid = np.asarray(grid)
+    # Multiset of colors conserved per column.
+    for c in range(g):
+        np.testing.assert_array_equal(
+            np.sort(out[:, c]), np.sort(grid[:, c])
+        )
+    # No empty below a non-empty cell (row 0 = top).
+    for c in range(g):
+        col = out[:, c]
+        nonempty_started = False
+        for r in range(g):
+            if col[r] != EMPTY:
+                nonempty_started = True
+            else:
+                assert not nonempty_started, f"floating cell in column {c}: {col}"
+
+
+# ---------------------------------------------------------------------------
+# MDP contract: deterministic-given-state, done absorbing
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    env_kind=st.sampled_from(["tap", "mdp", "bandit"]),
+)
+def test_step_deterministic_given_state(seed, env_kind):
+    env = {
+        "tap": lambda: make_tap_game(grid_size=5, num_colors=3),
+        "mdp": lambda: make_random_mdp(num_states=8, num_actions=3, horizon=5),
+        "bandit": lambda: make_bandit_tree(depth=3, num_actions=3),
+    }[env_kind]()
+    key = jax.random.PRNGKey(seed)
+    state = env.init(key)
+    a = jax.random.randint(jax.random.fold_in(key, 1), (), 0, env.num_actions)
+    step = jax.jit(env.step)
+    s1, r1, d1 = step(state, a)
+    s2, r2, d2 = step(state, a)
+    for x, y in zip(jax.tree.leaves(s1), jax.tree.leaves(s2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert float(r1) == float(r2) and bool(d1) == bool(d2)
+
+
+def test_done_is_absorbing():
+    env = make_bandit_tree(depth=2, num_actions=2)
+    s = env.init(jax.random.PRNGKey(0))
+    step = jax.jit(env.step)
+    for _ in range(5):
+        s, r, d = step(s, jnp.int32(0))
+    assert bool(d)
+    s2, r2, d2 = step(s, jnp.int32(1))
+    assert float(r2) == 0.0 and bool(d2)
+
+
+def test_tap_game_goal_completion_terminates():
+    env = make_tap_game(grid_size=5, num_colors=2, goal_count=2, step_budget=30)
+    key = jax.random.PRNGKey(1)
+    s = env.init(key)
+    step = jax.jit(env.step)
+    pol = jax.jit(env.policy)
+    done = False
+    for i in range(30):
+        a = pol(jax.random.fold_in(key, i), s)
+        s, r, d = step(s, a)
+        if bool(d):
+            done = True
+            break
+    assert done  # 2 colors / goal 2: trivially completable within budget

@@ -1,0 +1,105 @@
+"""Property tests on eq. (4) — the paper's Sec. 3.1/Sec. 4 claims as math.
+
+* Monotonicity: adding unobserved samples O to a child strictly decreases
+  its score (in-flight work repels new workers — diversity);
+* Vanishing penalty: the relative score penalty of O in-flight visits → 0 as
+  N grows (exploitation of a known-best child is not blocked — the property
+  virtual loss lacks);
+* Parent-O effect: in-flight work through the parent raises ALL children's
+  exploration terms equally (no bias).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import init_tree
+from repro.core.policies import PolicyConfig, child_scores
+from repro.envs import make_bandit_tree
+
+
+def _tree_with_root_children(n_children, n_vals, o_vals, v_vals, n_p, o_p):
+    env = make_bandit_tree(depth=3, num_actions=n_children)
+    tree = init_tree(env.init(jax.random.PRNGKey(0)), 32, n_children)
+    kids = jnp.arange(1, n_children + 1, dtype=jnp.int32)
+    tree = tree._replace(
+        children=tree.children.at[0].set(kids),
+        parent=tree.parent.at[1 : n_children + 1].set(0),
+        N=tree.N.at[0].set(n_p).at[kids].set(jnp.asarray(n_vals, jnp.float32)),
+        O=tree.O.at[0].set(o_p).at[kids].set(jnp.asarray(o_vals, jnp.float32)),
+        V=tree.V.at[kids].set(jnp.asarray(v_vals, jnp.float32)),
+        size=jnp.int32(n_children + 1),
+    )
+    return tree
+
+
+CFG = PolicyConfig(kind="wu_uct", beta=1.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.floats(min_value=1, max_value=100),
+    o=st.floats(min_value=1, max_value=16),
+    v=st.floats(min_value=-1, max_value=1),
+)
+def test_adding_o_decreases_child_score(n, o, v):
+    t0 = _tree_with_root_children(2, [n, n], [0.0, 0.0], [v, v], 2 * n, 0.0)
+    t1 = _tree_with_root_children(2, [n, n], [o, 0.0], [v, v], 2 * n, o)
+    s0 = np.asarray(child_scores(t0, jnp.int32(0), CFG))
+    s1 = np.asarray(child_scores(t1, jnp.int32(0), CFG))
+    assert s1[0] < s0[0]          # loaded child repels
+    assert s1[1] >= s0[1] - 1e-6  # unloaded sibling does not lose
+
+
+@settings(max_examples=20, deadline=None)
+@given(o=st.floats(min_value=1, max_value=16))
+def test_penalty_vanishes_with_n(o):
+    """Sec. 4: 'this penalty vanishes when N_s becomes large'."""
+    gaps = []
+    for n in (4.0, 64.0, 4096.0):
+        t_clean = _tree_with_root_children(2, [n, n], [0, 0], [1.0, 0.0],
+                                           2 * n, 0.0)
+        t_load = _tree_with_root_children(2, [n, n], [o, 0], [1.0, 0.0],
+                                          2 * n, o)
+        sc = np.asarray(child_scores(t_clean, jnp.int32(0), CFG))
+        sl = np.asarray(child_scores(t_load, jnp.int32(0), CFG))
+        gaps.append(sc[0] - sl[0])   # score drop caused by O on child 0
+    assert gaps[0] > gaps[1] > gaps[2] >= 0
+    assert gaps[2] < 0.05            # essentially gone at N=4096
+    # With large N, the best child stays selected even while loaded —
+    # the exploitation property virtual loss lacks.
+    t_load = _tree_with_root_children(2, [4096, 4096], [o, 0], [1.0, 0.0],
+                                      8192, o)
+    s = np.asarray(child_scores(t_load, jnp.int32(0), CFG))
+    assert s[0] > s[1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    o_p=st.floats(min_value=1, max_value=32),
+    n=st.floats(min_value=2, max_value=50),
+)
+def test_parent_o_raises_all_children_equally(o_p, n):
+    t0 = _tree_with_root_children(3, [n] * 3, [0.0] * 3, [0.3, 0.2, 0.1],
+                                  3 * n, 0.0)
+    t1 = _tree_with_root_children(3, [n] * 3, [0.0] * 3, [0.3, 0.2, 0.1],
+                                  3 * n, o_p)
+    s0 = np.asarray(child_scores(t0, jnp.int32(0), CFG))
+    s1 = np.asarray(child_scores(t1, jnp.int32(0), CFG))
+    deltas = s1 - s0
+    assert np.all(deltas > 0)                      # more exploration budget
+    # uniform across children, up to f32 ulps (deltas can be ~1e-4 small)
+    np.testing.assert_allclose(deltas, deltas[0], rtol=1e-3, atol=1e-6)
+
+
+def test_treep_vc_reduces_to_uct_when_idle():
+    """eq. (7) with zero in-flight queries == plain UCT."""
+    t = _tree_with_root_children(3, [5, 3, 2], [0, 0, 0], [0.5, 0.1, 0.9],
+                                 10, 0.0)
+    s_vc = np.asarray(
+        child_scores(t, jnp.int32(0), PolicyConfig(kind="treep_vc", r_vl=2.0,
+                                                   n_vl=2.0))
+    )
+    s_uct = np.asarray(child_scores(t, jnp.int32(0), PolicyConfig(kind="uct")))
+    np.testing.assert_allclose(s_vc, s_uct, rtol=1e-5)

@@ -1,0 +1,150 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers the paper's top-level claims at CPU scale:
+  1. WU-UCT solves planning tasks (finds optimal arms / completes levels);
+  2. performance is insensitive to the worker count (Fig. 4c-d);
+  3. WU-UCT beats virtual-loss TreeP on exploitation (Sec. 4);
+  4. naive parallelization shows exploration collapse; WU-UCT does not;
+  5. the serving engine (continuous batching) matches naive generation.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_algorithm, make_config
+from repro.envs import make_bandit_tree, make_tap_game
+from repro.envs.bandit_tree import solve_bandit_tree
+
+
+def test_wu_uct_finds_optimal_arm():
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    _, opt_a, _ = solve_bandit_tree(4, 4, 0, gamma=1.0)
+    cfg = make_config(
+        "wu_uct", num_simulations=128, wave_size=8, max_depth=8,
+        max_sim_steps=8, max_width=4, gamma=1.0,
+    )
+    fn = make_algorithm("wu_uct", env, cfg)
+    state = env.init(jax.random.PRNGKey(0))
+    hits = sum(
+        int(fn(state, jax.random.PRNGKey(t)).action) == opt_a for t in range(5)
+    )
+    assert hits >= 4
+
+
+def test_worker_count_insensitivity():
+    """Fig 4(c-d): visit distribution quality is stable across wave sizes."""
+    env = make_bandit_tree(depth=4, num_actions=4, seed=2)
+    _, opt_a, _ = solve_bandit_tree(4, 4, 2, gamma=1.0)
+    shares = []
+    for w in (1, 4, 16):
+        cfg = make_config(
+            "wu_uct", num_simulations=128, wave_size=w, max_depth=8,
+            max_sim_steps=8, max_width=4, gamma=1.0,
+        )
+        fn = make_algorithm("wu_uct", env, cfg)
+        state = env.init(jax.random.PRNGKey(0))
+        share = []
+        for t in range(4):
+            res = fn(state, jax.random.PRNGKey(10 + t))
+            n = np.asarray(res.root_n)
+            share.append(n[opt_a] / n.sum())
+        shares.append(np.mean(share))
+    # Optimal-arm visit share must not collapse as W grows.
+    assert min(shares) > 0.45, shares
+    assert max(shares) - min(shares) < 0.35, shares
+
+
+def test_wu_uct_beats_treep_exploitation():
+    """Sec. 4 exploitation failure: large virtual loss flattens TreeP's visit
+    distribution; WU-UCT keeps exploiting the best arm."""
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    _, opt_a, _ = solve_bandit_tree(4, 4, 0, gamma=1.0)
+    state = env.init(jax.random.PRNGKey(0))
+
+    def opt_share(algo, **kw):
+        cfg = make_config(
+            algo, num_simulations=128, wave_size=16, max_depth=8,
+            max_sim_steps=8, max_width=4, gamma=1.0, **kw,
+        )
+        fn = make_algorithm(algo, env, cfg)
+        vals = []
+        for t in range(4):
+            res = fn(state, jax.random.PRNGKey(50 + t))
+            n = np.asarray(res.root_n)
+            vals.append(n[opt_a] / n.sum())
+        return np.mean(vals)
+
+    wu = opt_share("wu_uct")
+    tp = opt_share("treep", r_vl=5.0)
+    assert wu > tp + 0.1, (wu, tp)
+
+
+def test_wu_uct_reduces_duplicate_selection():
+    """Sec. 2.2 collapse of exploration: within a wave, WU-UCT's O statistics
+    diversify stop-nodes relative to stale-stats selection (treep r_vl=0 is
+    exactly eq. (2) with no in-flight correction)."""
+    env = make_bandit_tree(depth=5, num_actions=4, seed=7)
+    state = env.init(jax.random.PRNGKey(0))
+    dups = {}
+    for name, algo, kw in [
+        ("naive", "treep", dict(r_vl=0.0)),
+        ("wu_uct", "wu_uct", {}),
+    ]:
+        cfg = make_config(
+            algo, num_simulations=96, wave_size=16, max_depth=8,
+            max_sim_steps=8, max_width=4, gamma=1.0, **kw,
+        )
+        fn = make_algorithm(algo, env, cfg)
+        vals = [
+            float(fn(state, jax.random.PRNGKey(60 + t)).dup_selections)
+            for t in range(3)
+        ]
+        dups[name] = np.mean(vals)
+    assert dups["wu_uct"] < dups["naive"], dups
+
+
+def test_serving_engine_matches_naive_generation():
+    from repro.configs import get_reduced
+    from repro.models import forward, init_params
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(
+        cfg, params, ServeConfig(batch_slots=2, max_len=32, eos_token=1)
+    )
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(2, cfg.vocab_size, size=8)) for _ in range(3)]
+    outs = engine.run(prompts, max_ticks=40)
+
+    # Naive greedy generation, one request at a time.
+    for prompt, out in zip(prompts, outs):
+        assert len(out) > 0
+        toks = list(prompt)
+        naive = []
+        for _ in range(len(out)):
+            logits, _ = forward(
+                params, cfg, {"tokens": jnp.asarray(toks, jnp.int32)[None]}
+            )
+            t = int(jnp.argmax(logits[0, len(toks) - 1]))
+            naive.append(t)
+            toks.append(t)
+            if t == 1:
+                break
+        assert naive == out[: len(naive)], (naive, out)
+
+
+def test_tap_game_episode_completes_with_search():
+    env = make_tap_game(grid_size=5, num_colors=3, goal_count=6, step_budget=16)
+    from repro.core import play_episode
+
+    cfg = make_config(
+        "wu_uct", num_simulations=32, wave_size=8, max_depth=8,
+        max_sim_steps=10, max_width=5, gamma=1.0,
+    )
+    ret, moves, done = play_episode(env, cfg, jax.random.PRNGKey(3), max_moves=16)
+    assert done and ret > 0.5  # goal completed within budget

@@ -1,0 +1,159 @@
+"""Training substrate: optimizer, microbatching, data, checkpoints, compression."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import init_params
+from repro.training import (
+    AdamWConfig,
+    CheckpointManager,
+    PackedShards,
+    SyntheticStream,
+    TrainConfig,
+    adamw_init,
+    make_train_step,
+    write_token_shards,
+)
+from repro.training.optimizer import cosine_schedule
+
+
+def _setup(arch="llama3-8b", **overrides):
+    cfg = dataclasses.replace(get_reduced(arch), **overrides)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    return cfg, params, opt
+
+
+def test_train_step_decreases_loss():
+    cfg, params, opt = _setup()
+    tc = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=50))
+    step = jax.jit(make_train_step(cfg, tc))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over microbatches == single big batch step."""
+    cfg, params, opt = _setup()
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(2), (8, 16), 0,
+                                          cfg.vocab_size)}
+    oc = AdamWConfig(lr=1e-3, warmup_steps=0, total_steps=10)
+    p1, _, m1 = jax.jit(make_train_step(cfg, TrainConfig(optimizer=oc)))(
+        params, opt, batch
+    )
+    p2, _, m2 = jax.jit(
+        make_train_step(cfg, TrainConfig(optimizer=oc, microbatches=4))
+    )(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=2e-4, atol=2e-5,
+        )
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(cosine_schedule(cfg, jnp.int32(0))) == 0.0
+    assert abs(float(cosine_schedule(cfg, jnp.int32(10))) - 1.0) < 1e-6
+    assert float(cosine_schedule(cfg, jnp.int32(100))) == pytest.approx(0.1, rel=1e-3)
+
+
+def test_synthetic_stream_deterministic_and_sharded():
+    s1 = SyntheticStream(100, batch_size=8, seq_len=16, seed=3, dp_rank=0, dp_world=2)
+    s2 = SyntheticStream(100, batch_size=8, seq_len=16, seed=3, dp_rank=0, dp_world=2)
+    s3 = SyntheticStream(100, batch_size=8, seq_len=16, seed=3, dp_rank=1, dp_world=2)
+    b1, b2, b3 = s1.batch_at(7), s2.batch_at(7), s3.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])  # deterministic
+    assert b1["tokens"].shape == (4, 16)                        # local batch
+    assert not np.array_equal(b1["tokens"], b3["tokens"])       # disjoint ranks
+
+
+def test_packed_shards_roundtrip(tmp_path):
+    path = str(tmp_path / "shards")
+    write_token_shards(path, num_shards=2, tokens_per_shard=256, vocab_size=50)
+    ds = PackedShards(path, batch_size=4, seq_len=16, dp_rank=1, dp_world=2)
+    b0 = ds.batch_at(0)
+    b0_again = ds.batch_at(0)
+    np.testing.assert_array_equal(b0["tokens"], b0_again["tokens"])
+    assert b0["tokens"].shape == (2, 16)
+    assert b0["tokens"].max() < 50
+
+
+def test_checkpoint_roundtrip_and_keep_k(tmp_path):
+    cfg, params, opt = _setup()
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for step in (10, 20, 30):
+        mgr.save(step, (params, opt), blocking=True)
+    assert mgr.all_steps() == [20, 30]           # keep-k GC
+    step, (p2, o2) = mgr.restore((params, opt))
+    assert step == 30
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A stale tmp dir never masks or corrupts the published checkpoint."""
+    cfg, params, opt = _setup()
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    os.makedirs(str(tmp_path / "tmp.99"))        # simulated crashed save
+    mgr.save(99, (params, opt), blocking=True)
+    assert mgr.all_steps() == [99]
+    _, restored = mgr.restore((params, opt))
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore under a different device mesh (elastic restart)."""
+    cfg, params, opt = _setup()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(5, params, blocking=True)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), params)
+    step, restored = mgr.restore(params, shardings=shardings)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grad_compression_error_feedback():
+    from repro.distributed.compress import compress_with_feedback
+
+    g = {"w": jnp.linspace(-1.0, 1.0, 1024).reshape(32, 32)}
+    err = None
+    acc_true = np.zeros((32, 32))
+    acc_q = np.zeros((32, 32))
+    for _ in range(50):
+        gq, err = compress_with_feedback(g, err)
+        acc_true += np.asarray(g["w"])
+        acc_q += np.asarray(gq["w"])
+    # Error feedback keeps the long-run average unbiased.
+    rel = np.abs(acc_q - acc_true).max() / np.abs(acc_true).max()
+    assert rel < 0.01, rel
+
+
+def test_train_with_compression_still_learns():
+    cfg, params, opt = _setup()
+    tc = TrainConfig(
+        optimizer=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=50),
+        compress_grads=True,
+    )
+    step = jax.jit(make_train_step(cfg, tc))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.05, losses
