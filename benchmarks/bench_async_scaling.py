@@ -32,7 +32,7 @@ def run(num_simulations: int = 64, waves=(1, 4, 16)) -> list[str]:
         )
         search = make_async_searcher(env, cfg)
         res = search(state, key)
-        ticks = float(res.max_o)    # diagnostic: master ticks used
+        ticks = float(res.ticks)
         if base_ticks is None:
             base_ticks = ticks
         barrier_bound = (num_simulations // w) * (cfg.max_sim_steps + 1)

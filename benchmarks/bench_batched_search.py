@@ -1,0 +1,75 @@
+"""Batched multi-root search throughput: searches/sec vs batch size B.
+
+The claim under test (ROADMAP north star — throughput *across* searches):
+running B independent trees in lockstep through the fused Pallas
+``tree_select`` kernel amortizes master-side work over the batch, beating
+``jax.vmap`` of the single-tree engine (whose per-node scalar ``while_loop``
+selection cannot fuse the [B, A] score + argmax pass).
+
+Rows: ``batched_B{n}`` / ``vmap_single_B{n}`` with derived searches/sec.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core import SearchConfig, PolicyConfig, run_search, run_search_batched
+from repro.envs import make_bandit_tree
+
+from .common import row, time_fn
+
+BATCH_SIZES = (1, 8, 32)
+
+
+def _cfg(num_simulations: int, wave_size: int) -> SearchConfig:
+    return SearchConfig(
+        num_simulations=num_simulations,
+        wave_size=wave_size,
+        max_depth=8,
+        max_sim_steps=8,
+        max_width=4,
+        gamma=0.99,
+        policy=PolicyConfig(kind="wu_uct"),
+        stat_mode="wu",
+    )
+
+
+def run(
+    num_simulations: int = 64,
+    wave_size: int = 8,
+    batch_sizes: tuple[int, ...] = BATCH_SIZES,
+) -> list[str]:
+    env = make_bandit_tree(depth=6, num_actions=4, seed=0)
+    cfg = _cfg(num_simulations, wave_size)
+    rows = []
+
+    batched = jax.jit(lambda s, k: run_search_batched(env, cfg, s, k))
+    vmapped = jax.jit(jax.vmap(lambda s, k: run_search(env, cfg, s, k)))
+
+    for B in batch_sizes:
+        roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), B))
+        rngs = jax.random.split(jax.random.PRNGKey(1), B)
+
+        t_b = time_fn(batched, roots, rngs, warmup=1, iters=3)
+        rows.append(row(f"batched_B{B}", t_b, f"{B / t_b:.1f} searches/s"))
+        t_v = time_fn(vmapped, roots, rngs, warmup=1, iters=3)
+        rows.append(row(f"vmap_single_B{B}", t_v, f"{B / t_v:.1f} searches/s"))
+
+        res_b = batched(roots, rngs)
+        res_v = vmapped(roots, rngs)
+        agree = np.mean(
+            np.asarray(res_b.action) == np.asarray(res_v.action)
+        )
+        rows.append(row(f"agreement_B{B}", 0.0, f"{agree:.2f} action match"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

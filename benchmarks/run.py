@@ -8,6 +8,7 @@ Each module maps to one paper artifact (see DESIGN.md §7):
   bench_treep_variants  — Table 5 / App. E     (virtual pseudo-count TreeP)
   bench_time_breakdown  — Fig. 2(b-c)          (phase time breakdown)
   bench_regret          — beyond-paper exact-regret study (Sec. 4 claims)
+  bench_batched_search  — beyond-paper multi-root throughput (searches/sec vs B)
 
 Roofline tables come from ``python -m benchmarks.roofline`` (reads the
 dry-run artifacts; see EXPERIMENTS.md §Roofline).
@@ -28,6 +29,7 @@ def main() -> None:
 
     from . import (
         bench_async_scaling,
+        bench_batched_search,
         bench_parallel_algos,
         bench_regret,
         bench_speedup,
@@ -57,6 +59,10 @@ def main() -> None:
         "regret": lambda: bench_regret.run(trials=2 if args.fast else 5),
         "async_scaling": lambda: bench_async_scaling.run(
             num_simulations=32 if args.fast else 64,
+        ),
+        "batched_search": lambda: bench_batched_search.run(
+            num_simulations=32 if args.fast else 64,
+            batch_sizes=(1, 8) if args.fast else (1, 8, 32),
         ),
     }
     selected = args.only.split(",") if args.only else list(modules)

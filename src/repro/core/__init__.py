@@ -1,8 +1,12 @@
 # The paper's primary contribution: WU-UCT parallel MCTS (wave-scheduled,
-# SPMD-shardable) plus the baseline parallelizations it is compared against.
+# SPMD-shardable) plus the baseline parallelizations it is compared against,
+# and the batched multi-root engine (B independent trees in lockstep through
+# the fused Pallas tree_select kernel).
 from .policies import PolicyConfig
 from .tree import Tree, init_tree
+from .batched_tree import BatchedTree, init_batched_tree
 from .wu_uct import SearchConfig, SearchResult, make_searcher, play_episode, run_search
+from .batched_search import make_batched_searcher, run_search_batched
 from .async_search import make_async_searcher, run_async_search
 from .baselines import (
     make_algorithm,
@@ -16,13 +20,17 @@ __all__ = [
     "PolicyConfig",
     "Tree",
     "init_tree",
+    "BatchedTree",
+    "init_batched_tree",
     "SearchConfig",
     "SearchResult",
     "make_async_searcher",
+    "make_batched_searcher",
     "make_searcher",
     "play_episode",
     "run_async_search",
     "run_search",
+    "run_search_batched",
     "make_algorithm",
     "make_config",
     "run_leafp",

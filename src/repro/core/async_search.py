@@ -112,12 +112,13 @@ def run_async_search(
                     & (n_tried < width)
                 )
                 act = expansion_action(tree, node, k_e)
-                tree, child = jax.lax.cond(
+                tree, child, reserved = jax.lax.cond(
                     needs_exp,
                     lambda t: tree_lib.reserve_child(t, node, act),
-                    lambda t: (t, node),
+                    lambda t: (t, node, jnp.bool_(False)),
                     tree,
                 )
+                needs_exp = needs_exp & reserved
                 sim_node = jnp.where(needs_exp, child, node).astype(jnp.int32)
                 tree = _mark_in_flight(tree, sim_node, cfg)
 
@@ -229,23 +230,29 @@ def run_async_search(
         return jax.lax.fori_loop(0, W, body, (tree, slots, t_done))
 
     def cond(carry):
-        _, _, _, _, t_done, _ = carry
+        _, _, _, _, t_done, _, _ = carry
         return t_done < T
 
     def master_iter(carry):
-        tree, slots, rng, t_launch, t_done, ticks = carry
+        tree, slots, rng, t_launch, t_done, ticks, max_o = carry
         rng, k_tick = jax.random.split(rng)
         tree, slots, rng, t_launch, t_done = refill(
             (tree, slots, rng, t_launch, t_done)
         )
+        max_o = jnp.maximum(max_o, tree.O[0])
         slots, r_edge, done_edge = tick(slots, k_tick)
         tree, slots, t_done = settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
-        return tree, slots, rng, t_launch, t_done, ticks + 1
+        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o
 
-    init = (tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0))
-    tree, slots, _, _, _, ticks = jax.lax.while_loop(cond, master_iter, init)
+    init = (
+        tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+        jnp.float32(0.0),
+    )
+    tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
+        cond, master_iter, init
+    )
 
     root_n, root_v = tree_lib.root_action_stats(tree)
     return SearchResult(
@@ -254,7 +261,9 @@ def run_async_search(
         root_v=root_v,
         tree_size=tree.size,
         dup_selections=jnp.float32(0.0),
-        max_o=ticks.astype(jnp.float32),  # repurposed: master ticks used
+        max_o=max_o,
+        overflowed=tree.overflowed,
+        ticks=ticks,
     )
 
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from ..envs.base import Environment
 from . import tree as tree_lib
+from .batched_search import run_search_batched
 from .policies import PolicyConfig, expansion_action
 from .tree import Tree
 from .wu_uct import (
@@ -106,10 +107,17 @@ def run_leafp(
         act = expansion_action(tree, node, k_e)
 
         def do_expand(t):
-            t, child = tree_lib.reserve_child(t, node, act)
+            t, child, ok = tree_lib.reserve_child(t, node, act)
             st = tree_lib.get_state(t, node)
             child_state, r_edge, done = env.step(st, act)
-            t = tree_lib.finalize_child(t, child, child_state, r_edge, done)
+            t = jax.lax.cond(
+                ok,
+                lambda tt: tree_lib.finalize_child(
+                    tt, child, child_state, r_edge, done
+                ),
+                lambda tt: tt,
+                t,
+            )
             return t, child
 
         tree, sim_node = jax.lax.cond(
@@ -139,6 +147,8 @@ def run_leafp(
         tree_size=tree.size,
         dup_selections=jnp.float32(W - 1),  # by construction
         max_o=jnp.float32(0.0),
+        overflowed=tree.overflowed,
+        ticks=jnp.int32(num_rounds),
     )
 
 
@@ -154,8 +164,11 @@ def run_treep(env, cfg, root_state, rng, constrain=None) -> SearchResult:
 
 
 # ---------------------------------------------------------------------------
-# RootP — Algorithm 6.  K independent sequential-UCT trees over the same
-# root state (different chance keys), statistics merged at move time.
+# RootP / Ensemble-UCT — Algorithm 6.  K independent sequential-UCT trees over
+# the same root state (different chance keys), statistics merged at move time.
+# Implemented as one K-batched forest on the multi-root engine, so the root
+# committee advances in lockstep through the fused tree_select kernel
+# (Mirsoleimani et al.; "Ensemble UCT Needs High Exploitation").
 # ---------------------------------------------------------------------------
 
 
@@ -164,6 +177,7 @@ def run_rootp(
     cfg: SearchConfig,
     root_state: Pytree,
     rng: jax.Array,
+    use_kernel: bool = True,
 ) -> SearchResult:
     K = cfg.wave_size
     if cfg.num_simulations % K != 0:
@@ -174,25 +188,29 @@ def run_rootp(
         stat_mode="none",
         policy=cfg.policy._replace(kind="uct"),
     )
-
-    def one_worker(key):
-        res = run_search(env, sub_cfg, root_state, key)
-        return res.root_n, res.root_v, res.tree_size
-
-    ns, vs, sizes = jax.vmap(one_worker)(jax.random.split(rng, K))
-    n_tot = jnp.sum(ns, axis=0)
+    roots = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (K,) + jnp.shape(x)), root_state
+    )
+    sub = run_search_batched(
+        env, sub_cfg, roots, jax.random.split(rng, K), use_kernel=use_kernel
+    )
+    n_tot = jnp.sum(sub.root_n, axis=0)
     v_tot = jnp.where(
-        n_tot > 0, jnp.sum(ns * jnp.where(jnp.isfinite(vs), vs, 0.0), axis=0)
-        / jnp.maximum(n_tot, 1e-9), -jnp.inf
+        n_tot > 0,
+        jnp.sum(sub.root_n * jnp.where(jnp.isfinite(sub.root_v), sub.root_v, 0.0),
+                axis=0) / jnp.maximum(n_tot, 1e-9),
+        -jnp.inf,
     )
     action = jnp.argmax(n_tot).astype(jnp.int32)
     return SearchResult(
         action=action,
         root_n=n_tot,
         root_v=v_tot,
-        tree_size=jnp.sum(sizes),
+        tree_size=jnp.sum(sub.tree_size),
         dup_selections=jnp.float32(0.0),
         max_o=jnp.float32(0.0),
+        overflowed=jnp.any(sub.overflowed),
+        ticks=jnp.max(sub.ticks),
     )
 
 

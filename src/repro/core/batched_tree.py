@@ -1,0 +1,307 @@
+"""Batched structure-of-arrays search forest: ``B`` independent trees.
+
+This is the multi-root throughput layer: every SoA buffer of
+:class:`repro.core.tree.Tree` gains a leading ``[B, ...]`` axis and every
+path walk becomes a *lockstep* masked walk — all ``B`` trees climb their own
+parent chains simultaneously inside one ``lax.while_loop`` whose trip count
+is the deepest active path.  Trees that reach their root (or are masked out
+with ``NO_NODE``) simply stop contributing updates.
+
+Semantics are element-wise identical to the single-tree ops: the batched
+engine built on top of this module must agree exactly with
+``jax.vmap``-of-single-tree under identical per-tree RNG streams (this is
+tested in ``tests/test_batched_search.py``).
+
+The batch axis is the natural sharding axis for serving many users' searches
+from one accelerator — see ``distributed/sharding.py`` (``B`` shards over the
+``('pod', 'data')`` mesh axes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .tree import NO_NODE
+
+Pytree = Any
+
+
+class BatchedTree(NamedTuple):
+    """Fixed-capacity SoA forest of ``B`` trees (a pure pytree)."""
+
+    parent: jax.Array      # i32[B, M]
+    action: jax.Array      # i32[B, M]
+    children: jax.Array    # i32[B, M, A]
+    N: jax.Array           # f32[B, M]    completed-visit counts
+    O: jax.Array           # f32[B, M]    in-flight visit counts
+    V: jax.Array           # f32[B, M]    running mean value
+    VL: jax.Array          # f32[B, M]    virtual-loss accumulator
+    R: jax.Array           # f32[B, M]    reward on the edge INTO the node
+    terminal: jax.Array    # bool[B, M]
+    pending: jax.Array     # bool[B, M]
+    depth: jax.Array       # i32[B, M]
+    size: jax.Array        # i32[B]       allocated nodes per tree
+    overflowed: jax.Array  # bool[B]      reserve attempted at capacity
+    states: Pytree         # pytree[B, M, ...] env state per node
+
+    @property
+    def batch_size(self) -> int:
+        return self.parent.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.parent.shape[1]
+
+    @property
+    def num_actions(self) -> int:
+        return self.children.shape[2]
+
+
+def _bidx(tree: BatchedTree) -> jax.Array:
+    return jnp.arange(tree.batch_size)
+
+
+def init_batched_tree(
+    root_states: Pytree, capacity: int, num_actions: int
+) -> BatchedTree:
+    """Allocate ``B`` trees; ``root_states`` leaves carry a leading [B]."""
+    batch = jax.tree.leaves(root_states)[0].shape[0]
+    states = jax.tree.map(
+        lambda x: jnp.zeros((batch, capacity) + x.shape[1:],
+                            jnp.asarray(x).dtype).at[:, 0].set(x),
+        root_states,
+    )
+    return BatchedTree(
+        parent=jnp.full((batch, capacity), NO_NODE, jnp.int32),
+        action=jnp.full((batch, capacity), NO_NODE, jnp.int32),
+        children=jnp.full((batch, capacity, num_actions), NO_NODE, jnp.int32),
+        N=jnp.zeros((batch, capacity), jnp.float32),
+        O=jnp.zeros((batch, capacity), jnp.float32),
+        V=jnp.zeros((batch, capacity), jnp.float32),
+        VL=jnp.zeros((batch, capacity), jnp.float32),
+        R=jnp.zeros((batch, capacity), jnp.float32),
+        terminal=jnp.zeros((batch, capacity), jnp.bool_),
+        pending=jnp.zeros((batch, capacity), jnp.bool_),
+        depth=jnp.zeros((batch, capacity), jnp.int32),
+        size=jnp.ones((batch,), jnp.int32),
+        overflowed=jnp.zeros((batch,), jnp.bool_),
+        states=states,
+    )
+
+
+def get_state(tree: BatchedTree, nodes: jax.Array) -> Pytree:
+    """Per-tree node states; ``nodes`` is i32[B] → pytree[B, ...]."""
+    b = _bidx(tree)
+    return jax.tree.map(lambda x: x[b, nodes], tree.states)
+
+
+def set_state(
+    tree: BatchedTree, nodes: jax.Array, state: Pytree, mask: jax.Array
+) -> BatchedTree:
+    """Write ``state`` (leading [B]) at ``nodes`` where ``mask`` holds."""
+    b = _bidx(tree)
+
+    def one(buf, x):
+        m = mask.reshape((tree.batch_size,) + (1,) * (x.ndim - 1))
+        return buf.at[b, nodes].set(jnp.where(m, x, buf[b, nodes]))
+
+    return tree._replace(states=jax.tree.map(one, tree.states, state))
+
+
+# ---------------------------------------------------------------------------
+# Lockstep path walks.  Each is one while_loop advancing all B parent chains
+# at once; per-tree node pointers hit NO_NODE independently and freeze.
+# A caller masks a tree out of a walk by passing NO_NODE as its start node.
+# ---------------------------------------------------------------------------
+
+
+def incomplete_update(tree: BatchedTree, nodes: jax.Array) -> BatchedTree:
+    """Algorithm 2, vectorized: ``O += 1`` along every tree's path."""
+    b = _bidx(tree)
+
+    def cond(c):
+        n, _ = c
+        return jnp.any(n != NO_NODE)
+
+    def body(c):
+        n, O = c
+        active = n != NO_NODE
+        safe = jnp.maximum(n, 0)
+        O = O.at[b, safe].add(jnp.where(active, 1.0, 0.0))
+        return jnp.where(active, tree.parent[b, safe], NO_NODE), O
+
+    _, O = jax.lax.while_loop(cond, body, (nodes, tree.O))
+    return tree._replace(O=O)
+
+
+def complete_update(
+    tree: BatchedTree, nodes: jax.Array, sim_returns: jax.Array, gamma: float
+) -> BatchedTree:
+    """Algorithm 3, vectorized: ``N+=1; O-=1; r̄←R+γ·r̄; V←mean`` leaf→root."""
+    b = _bidx(tree)
+
+    def cond(c):
+        n, *_ = c
+        return jnp.any(n != NO_NODE)
+
+    def body(c):
+        n, r_bar, N, O, V = c
+        active = n != NO_NODE
+        safe = jnp.maximum(n, 0)
+        new_n = N[b, safe] + 1.0
+        new_r = tree.R[b, safe] + gamma * r_bar
+        new_v = ((new_n - 1.0) * V[b, safe] + new_r) / new_n
+        N = N.at[b, safe].set(jnp.where(active, new_n, N[b, safe]))
+        O = O.at[b, safe].add(jnp.where(active, -1.0, 0.0))
+        V = V.at[b, safe].set(jnp.where(active, new_v, V[b, safe]))
+        r_bar = jnp.where(active, new_r, r_bar)
+        return jnp.where(active, tree.parent[b, safe], NO_NODE), r_bar, N, O, V
+
+    _, _, N, O, V = jax.lax.while_loop(
+        cond, body,
+        (nodes, sim_returns.astype(jnp.float32), tree.N, tree.O, tree.V),
+    )
+    return tree._replace(N=N, O=O, V=V)
+
+
+def backprop_update(
+    tree: BatchedTree, nodes: jax.Array, sim_returns: jax.Array, gamma: float
+) -> BatchedTree:
+    """Algorithm 8, vectorized (sequential backprop; no O bookkeeping)."""
+    b = _bidx(tree)
+
+    def cond(c):
+        n, *_ = c
+        return jnp.any(n != NO_NODE)
+
+    def body(c):
+        n, r_bar, N, V = c
+        active = n != NO_NODE
+        safe = jnp.maximum(n, 0)
+        new_n = N[b, safe] + 1.0
+        new_r = tree.R[b, safe] + gamma * r_bar
+        new_v = ((new_n - 1.0) * V[b, safe] + new_r) / new_n
+        N = N.at[b, safe].set(jnp.where(active, new_n, N[b, safe]))
+        V = V.at[b, safe].set(jnp.where(active, new_v, V[b, safe]))
+        r_bar = jnp.where(active, new_r, r_bar)
+        return jnp.where(active, tree.parent[b, safe], NO_NODE), r_bar, N, V
+
+    _, _, N, V = jax.lax.while_loop(
+        cond, body, (nodes, sim_returns.astype(jnp.float32), tree.N, tree.V)
+    )
+    return tree._replace(N=N, V=V)
+
+
+def add_virtual_loss(
+    tree: BatchedTree, nodes: jax.Array, r_vl: float
+) -> BatchedTree:
+    return _shift_virtual_loss(tree, nodes, r_vl)
+
+
+def remove_virtual_loss(
+    tree: BatchedTree, nodes: jax.Array, r_vl: float
+) -> BatchedTree:
+    return _shift_virtual_loss(tree, nodes, -r_vl)
+
+
+def _shift_virtual_loss(
+    tree: BatchedTree, nodes: jax.Array, delta: float
+) -> BatchedTree:
+    b = _bidx(tree)
+
+    def cond(c):
+        n, _ = c
+        return jnp.any(n != NO_NODE)
+
+    def body(c):
+        n, VL = c
+        active = n != NO_NODE
+        safe = jnp.maximum(n, 0)
+        VL = VL.at[b, safe].add(jnp.where(active, delta, 0.0))
+        return jnp.where(active, tree.parent[b, safe], NO_NODE), VL
+
+    _, VL = jax.lax.while_loop(cond, body, (nodes, tree.VL))
+    return tree._replace(VL=VL)
+
+
+# ---------------------------------------------------------------------------
+# Allocation
+# ---------------------------------------------------------------------------
+
+
+def reserve_children(
+    tree: BatchedTree, parents: jax.Array, acts: jax.Array, mask: jax.Array
+) -> tuple[BatchedTree, jax.Array, jax.Array]:
+    """Per-tree :func:`repro.core.tree.reserve_child` where ``mask`` holds.
+
+    Returns ``(tree, child_nodes[B], ok[B])``; trees at capacity refuse the
+    reservation (``ok=False``, child = parent) and latch ``overflowed``.
+    """
+    b = _bidx(tree)
+    has_room = tree.size < tree.capacity
+    ok = mask & has_room
+    idx = jnp.minimum(tree.size, tree.capacity - 1)
+
+    def keep(buf, new):
+        return buf.at[b, idx].set(jnp.where(ok, new, buf[b, idx]))
+
+    tree = tree._replace(
+        parent=keep(tree.parent, parents),
+        action=keep(tree.action, acts),
+        children=tree.children.at[b, parents, acts].set(
+            jnp.where(ok, idx, tree.children[b, parents, acts])
+        ),
+        pending=keep(tree.pending, True),
+        depth=keep(tree.depth, tree.depth[b, parents] + 1),
+        size=tree.size + ok.astype(jnp.int32),
+        overflowed=tree.overflowed | (mask & jnp.logical_not(has_room)),
+    )
+    return tree, jnp.where(ok, idx, parents).astype(jnp.int32), ok
+
+
+def finalize_children(
+    tree: BatchedTree,
+    nodes: jax.Array,
+    states: Pytree,
+    rewards: jax.Array,
+    dones: jax.Array,
+    mask: jax.Array,
+) -> BatchedTree:
+    """Write expansion results into reserved children where ``mask`` holds."""
+    b = _bidx(tree)
+    tree = set_state(tree, nodes, states, mask)
+
+    def keep(buf, new):
+        return buf.at[b, nodes].set(jnp.where(mask, new, buf[b, nodes]))
+
+    return tree._replace(
+        R=keep(tree.R, rewards),
+        terminal=keep(tree.terminal, dones),
+        pending=keep(tree.pending, False),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Root statistics
+# ---------------------------------------------------------------------------
+
+
+def root_action_stats(tree: BatchedTree) -> tuple[jax.Array, jax.Array]:
+    """Per-tree per-action (N, V) at the root; untried get N=0, V=-inf."""
+    kids = tree.children[:, 0]                       # i32[B, A]
+    valid = kids >= 0
+    safe = jnp.maximum(kids, 0)
+    b = _bidx(tree)[:, None]
+    n = jnp.where(valid, tree.N[b, safe], 0.0)
+    v = jnp.where(valid, tree.V[b, safe], -jnp.inf)
+    return n, v
+
+
+def best_root_action(tree: BatchedTree) -> jax.Array:
+    """Most-visited root action per tree (value tiebreak)."""
+    n, v = root_action_stats(tree)
+    v_rank = jax.nn.softmax(jnp.where(jnp.isfinite(v), v, -1e9), axis=-1)
+    return jnp.argmax(n + 1e-6 * v_rank, axis=-1).astype(jnp.int32)

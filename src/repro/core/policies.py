@@ -83,6 +83,30 @@ def child_scores(tree: Tree, node: jax.Array, cfg: PolicyConfig) -> jax.Array:
     return jnp.where(valid, score, -jnp.inf)
 
 
+def gather_children_tables(tree, nodes: jax.Array):
+    """Dense [B, A] children-statistics tables at ``nodes`` (one per tree).
+
+    This is the gather feeding the fused Pallas ``tree_select`` kernel: for
+    each of the ``B`` current nodes, the stats of all its children plus the
+    parent totals.  ``tree`` is a :class:`repro.core.batched_tree.BatchedTree`.
+
+    Returns ``(n_c, o_c, v_c, vl_c, n_p, o_p, valid)`` with shapes
+    ``[B, A] × 4, [B] × 2, [B, A]``.
+    """
+    b = jnp.arange(nodes.shape[0])
+    kids = tree.children[b, nodes]                   # i32[B, A]
+    safe = jnp.maximum(kids, 0)
+    b2 = b[:, None]
+    valid = (kids >= 0) & jnp.logical_not(tree.pending[b2, safe])
+    n_c = tree.N[b2, safe]
+    o_c = tree.O[b2, safe]
+    v_c = tree.V[b2, safe]
+    vl_c = tree.VL[b2, safe]
+    n_p = tree.N[b, nodes]
+    o_p = tree.O[b, nodes]
+    return n_c, o_c, v_c, vl_c, n_p, o_p, valid
+
+
 def select_action(
     tree: Tree, node: jax.Array, cfg: PolicyConfig
 ) -> tuple[jax.Array, jax.Array]:

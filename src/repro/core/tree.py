@@ -47,6 +47,7 @@ class Tree(NamedTuple):
     pending: jax.Array     # bool[M]      reserved, expansion in flight
     depth: jax.Array       # i32[M]
     size: jax.Array        # i32[]        number of allocated nodes
+    overflowed: jax.Array  # bool[]       a reserve was attempted at capacity
     states: Pytree         # pytree[M, ...] env state per node
 
     @property
@@ -79,6 +80,7 @@ def init_tree(root_state: Pytree, capacity: int, num_actions: int) -> Tree:
         pending=jnp.zeros((capacity,), jnp.bool_),
         depth=jnp.zeros((capacity,), jnp.int32),
         size=jnp.int32(1),
+        overflowed=jnp.bool_(False),
         states=states,
     )
 
@@ -195,24 +197,37 @@ def remove_virtual_loss(tree: Tree, node: jax.Array, r_vl: float) -> Tree:
 
 def reserve_child(
     tree: Tree, parent: jax.Array, act: jax.Array
-) -> tuple[Tree, jax.Array]:
+) -> tuple[Tree, jax.Array, jax.Array]:
     """Allocate a pending child of ``parent`` via edge ``act``.
 
     The child becomes visible to the modified UCT policy immediately (its
     path ``O`` mass is added by the caller's incomplete update) but cannot be
     descended into until its expansion result is written by
     :func:`finalize_child`.
+
+    At capacity the reservation is refused instead of corrupting node 0:
+    nothing is written, ``tree.overflowed`` latches True, and the returned
+    node is ``parent`` with ``ok=False`` so callers degrade to simulating
+    from the stop node.  Returns ``(tree, node, ok)``.
     """
-    idx = tree.size
+    ok = tree.size < tree.capacity
+    idx = jnp.minimum(tree.size, tree.capacity - 1)
+
+    def keep(buf, new):
+        return buf.at[idx].set(jnp.where(ok, new, buf[idx]))
+
     tree = tree._replace(
-        parent=tree.parent.at[idx].set(parent),
-        action=tree.action.at[idx].set(act),
-        children=tree.children.at[parent, act].set(idx),
-        pending=tree.pending.at[idx].set(True),
-        depth=tree.depth.at[idx].set(tree.depth[parent] + 1),
-        size=tree.size + 1,
+        parent=keep(tree.parent, parent),
+        action=keep(tree.action, act),
+        children=tree.children.at[parent, act].set(
+            jnp.where(ok, idx, tree.children[parent, act])
+        ),
+        pending=keep(tree.pending, True),
+        depth=keep(tree.depth, tree.depth[parent] + 1),
+        size=tree.size + ok.astype(jnp.int32),
+        overflowed=tree.overflowed | jnp.logical_not(ok),
     )
-    return tree, idx
+    return tree, jnp.where(ok, idx, parent).astype(jnp.int32), ok
 
 
 def finalize_child(

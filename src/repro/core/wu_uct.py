@@ -56,6 +56,8 @@ class SearchResult(NamedTuple):
     # Diagnostics for the exploration-collapse studies (Sec. 2.2 / Sec. 4):
     dup_selections: jax.Array  # f32[] avg duplicate stop-nodes per wave
     max_o: jax.Array           # f32[] peak O at root (in-flight pressure)
+    overflowed: jax.Array      # bool[] tree capacity was hit during search
+    ticks: jax.Array           # i32[] master iterations (waves / async ticks)
 
 
 # ---------------------------------------------------------------------------
@@ -199,10 +201,6 @@ def _phase1_select(
         needs_expand = (
             jnp.logical_not(is_term) & jnp.logical_not(at_depth) & (n_tried < width)
         )
-        kind = jnp.where(
-            is_term, KIND_TERMINAL, jnp.where(needs_expand, KIND_EXPAND, KIND_SIM)
-        ).astype(jnp.int32)
-
         if cfg.deterministic_expansion:
             untried = tree.children[node] < 0
             act = jnp.argmax(untried).astype(jnp.int32)
@@ -213,10 +211,18 @@ def _phase1_select(
             return tree_lib.reserve_child(t, node, act)
 
         def no_reserve(t):
-            return t, node
+            return t, node, jnp.bool_(False)
 
-        tree, child = jax.lax.cond(needs_expand, do_reserve, no_reserve, tree)
-        sim_node = jnp.where(needs_expand, child, node).astype(jnp.int32)
+        tree, child, reserved = jax.lax.cond(
+            needs_expand, do_reserve, no_reserve, tree
+        )
+        # A refused reservation (capacity) degrades to simulating from the
+        # stop node itself — no expansion, no state write.
+        expanded = needs_expand & reserved
+        kind = jnp.where(
+            is_term, KIND_TERMINAL, jnp.where(expanded, KIND_EXPAND, KIND_SIM)
+        ).astype(jnp.int32)
+        sim_node = jnp.where(expanded, child, node).astype(jnp.int32)
 
         # Paper Algorithm 1: incomplete update as soon as the rollout is
         # initiated; terminal hits settle immediately with return 0.
@@ -359,6 +365,8 @@ def run_search(
         tree_size=tree.size,
         dup_selections=dup_acc / num_waves,
         max_o=max_o,
+        overflowed=tree.overflowed,
+        ticks=jnp.int32(num_waves),
     )
 
 

@@ -1,6 +1,7 @@
 from .sharding import (
     batch_spec,
     constrain,
+    constrain_search_batch,
     data_axes,
     logical_spec,
     opt_state_shardings,
@@ -10,6 +11,7 @@ from .sharding import (
 __all__ = [
     "batch_spec",
     "constrain",
+    "constrain_search_batch",
     "data_axes",
     "logical_spec",
     "opt_state_shardings",

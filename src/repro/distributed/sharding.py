@@ -13,7 +13,10 @@ Rules of thumb implemented here:
 * AdamW fp32 state (m, v, master) is additionally sharded over ``data`` on
   its largest divisible axis — ZeRO-style: DP replicas each own a slice of
   optimizer memory;
-* MCTS tree statistics are replicated; wave slots shard over ``(pod, data)``.
+* MCTS tree statistics are replicated; wave slots shard over ``(pod, data)``;
+* batched multi-root search (core/batched_search.py) shards its leading
+  tree-batch axis ``B`` over ``(pod, data)`` — each DP replica owns a slice
+  of the forest and its wave slots (see :func:`constrain_search_batch`).
 """
 
 from __future__ import annotations
@@ -75,6 +78,24 @@ def constrain(x: jax.Array, *axes) -> jax.Array:
             parts *= sizes[name]
         fixed.append(a if dim % parts == 0 else None)
     return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def constrain_search_batch(pytree: Pytree) -> Pytree:
+    """Shard the leading tree-batch axis of every leaf over ``(pod, data)``.
+
+    This is the ``constrain`` hook for the batched multi-root search engine
+    (:func:`repro.core.batched_search.run_search_batched`): slot tables and
+    per-node state buffers all lead with the ``B`` axis, so one constraint
+    rule covers the whole pytree.  A no-op outside a mesh context, and for
+    leaves whose leading dim does not divide the data axes.
+    """
+
+    def one(x):
+        if not hasattr(x, "ndim") or x.ndim == 0:
+            return x
+        return constrain(x, ("pod", "data"), *([None] * (x.ndim - 1)))
+
+    return jax.tree.map(one, pytree)
 
 
 # ---------------------------------------------------------------------------

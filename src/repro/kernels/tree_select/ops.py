@@ -9,14 +9,19 @@ import jax
 from .tree_select import tree_select_fwd
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "block_b", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "beta", "r_vl", "n_vl", "block_b", "interpret"),
+)
 def tree_select(
-    n_c, o_c, v_c, n_p, o_p, valid, *, beta: float = 1.0, block_b: int = 256,
-    interpret: bool | None = None,
+    n_c, o_c, v_c, n_p, o_p, valid, vl_c=None, *,
+    kind: str = "wu_uct", beta: float = 1.0, r_vl: float = 1.0,
+    n_vl: float = 1.0, block_b: int = 256, interpret: bool | None = None,
 ):
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     return tree_select_fwd(
-        n_c, o_c, v_c, n_p, o_p, valid,
-        beta=beta, block_b=block_b, interpret=interpret,
+        n_c, o_c, v_c, n_p, o_p, valid, vl_c,
+        kind=kind, beta=beta, r_vl=r_vl, n_vl=n_vl,
+        block_b=block_b, interpret=interpret,
     )

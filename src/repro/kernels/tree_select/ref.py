@@ -1,17 +1,39 @@
-"""Pure-jnp oracle for the batched WU-UCT selection kernel."""
+"""Pure-jnp oracle for the batched tree-selection kernel (all score kinds).
+
+Delegates the per-kind score math to :func:`..tree_select._scores` — the
+same jnp expression the Pallas kernel traces — so the oracle and the kernel
+cannot drift; what this module adds is only the non-fused mask + argmax.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from .tree_select import NEG_INF, _scores
 
-def tree_select_ref(n_c, o_c, v_c, n_p, o_p, valid, beta: float = 1.0):
+
+def tree_select_ref(
+    n_c,
+    o_c,
+    v_c,
+    n_p,
+    o_p,
+    valid,
+    vl_c=None,
+    *,
+    kind: str = "wu_uct",
+    beta: float = 1.0,
+    r_vl: float = 1.0,
+    n_vl: float = 1.0,
+):
     n_c = n_c.astype(jnp.float32)
     o_c = o_c.astype(jnp.float32)
     v_c = v_c.astype(jnp.float32)
-    log_term = jnp.log(jnp.maximum(n_p + o_p, 1.0))[:, None]
-    denom = n_c + o_c
-    explore = beta * jnp.sqrt(2.0 * log_term / jnp.maximum(denom, 1e-9))
-    score = v_c + jnp.where(denom > 0, explore, jnp.inf)
-    score = jnp.where(valid, score, -1e30)
+    vl_c = jnp.zeros_like(v_c) if vl_c is None else vl_c.astype(jnp.float32)
+    score = _scores(
+        n_c, o_c, v_c, vl_c,
+        n_p.astype(jnp.float32)[:, None], o_p.astype(jnp.float32)[:, None],
+        kind=kind, beta=beta, r_vl=r_vl, n_vl=n_vl,
+    )
+    score = jnp.where(valid, score, NEG_INF)
     return jnp.argmax(score, axis=1).astype(jnp.int32), jnp.max(score, axis=1)

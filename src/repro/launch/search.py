@@ -3,6 +3,11 @@
 Usage:
   PYTHONPATH=src python -m repro.launch.search --env tap --algo wu_uct \
       --workers 16 --simulations 128 --episodes 2
+
+Batched multi-root mode (B independent searches in lockstep through the
+fused Pallas tree_select kernel; reports searches/sec):
+  PYTHONPATH=src python -m repro.launch.search --env bandit --algo wu_uct \
+      --batch 32 --workers 8 --simulations 64
 """
 
 from __future__ import annotations
@@ -13,7 +18,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import make_algorithm, make_config, play_episode
+from repro.core import make_algorithm, make_batched_searcher, make_config, play_episode
 from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
 
 
@@ -40,6 +45,9 @@ def main() -> None:
     ap.add_argument("--max-depth", type=int, default=10)
     ap.add_argument("--width", type=int, default=5)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0,
+                    help="B>0: run B root states through the batched "
+                         "multi-root engine instead of episode play")
     args = ap.parse_args()
 
     env = make_env(args.env)
@@ -52,6 +60,27 @@ def main() -> None:
         max_width=min(args.width, env.num_actions),
         gamma=0.99,
     )
+
+    if args.batch > 0:
+        if args.algo in ("leafp", "rootp"):
+            raise SystemExit(f"--batch supports wave-engine algos, not {args.algo}")
+        B = args.batch
+        search = make_batched_searcher(env, cfg)
+        roots = jax.vmap(env.init)(
+            jax.random.split(jax.random.PRNGKey(args.seed), B)
+        )
+        rngs = jax.random.split(jax.random.PRNGKey(args.seed + 1), B)
+        res = jax.block_until_ready(search(roots, rngs))  # compile
+        t0 = time.time()
+        res = jax.block_until_ready(search(roots, rngs))
+        dt = time.time() - t0
+        acts = np.asarray(res.action)
+        print(f"{args.algo} B={B} W={cfg.wave_size} T={cfg.num_simulations}: "
+              f"{B / dt:.1f} searches/s  wall={dt:.2f}s  "
+              f"actions={acts[:min(B, 16)].tolist()}"
+              f"{'…' if B > 16 else ''}  overflowed={bool(res.overflowed.any())}")
+        return
+
     searcher = make_algorithm(args.algo, env, cfg)
     rets, steps = [], []
     for ep in range(args.episodes):

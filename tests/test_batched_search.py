@@ -1,0 +1,267 @@
+"""Batched multi-root engine: vmap-of-single-tree oracle + kernel parity.
+
+Two correctness pillars:
+
+1. ``run_search_batched`` (selection fused through the Pallas ``tree_select``
+   kernel, interpret mode on CPU) must agree *exactly* with ``jax.vmap`` of
+   the single-tree wave engine per root — the batched tree layer carries
+   per-tree RNG streams with the same split structure, so results are
+   bit-compatible, not just statistically close.
+2. The extended kernel must match :func:`repro.core.policies.child_scores`
+   (the interpret-mode reference) for all four policy kinds.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    PolicyConfig,
+    SearchConfig,
+    init_tree,
+    make_config,
+    run_search,
+    run_search_batched,
+)
+from repro.core import tree as tree_lib
+from repro.core import batched_tree as btree_lib
+from repro.core.policies import child_scores
+from repro.envs import make_bandit_tree
+from repro.kernels.tree_select.ops import tree_select
+
+
+def _roots_and_rngs(env, B, seed=0):
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(seed), B))
+    rngs = jax.random.split(jax.random.PRNGKey(seed + 1), B)
+    return roots, rngs
+
+
+def _assert_results_equal(single, batched):
+    np.testing.assert_array_equal(
+        np.asarray(single.root_n), np.asarray(batched.root_n)
+    )
+    np.testing.assert_allclose(
+        np.asarray(single.root_v), np.asarray(batched.root_v), rtol=1e-6
+    )
+    np.testing.assert_array_equal(
+        np.asarray(single.action), np.asarray(batched.action)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(single.tree_size), np.asarray(batched.tree_size)
+    )
+
+
+def test_batched_matches_vmapped_single_deterministic():
+    """ISSUE acceptance: B-batched search with stat_mode='none', wave_size=1,
+    deterministic_expansion=True equals jax.vmap of the single engine."""
+    env = make_bandit_tree(depth=4, num_actions=3, seed=7)
+    cfg = SearchConfig(
+        num_simulations=16,
+        wave_size=1,
+        max_depth=5,
+        max_sim_steps=5,
+        max_width=3,
+        gamma=0.9,
+        policy=PolicyConfig(kind="uct"),
+        stat_mode="none",
+        expand_coin=1.0,
+        deterministic_expansion=True,
+    )
+    roots, rngs = _roots_and_rngs(env, B=8)
+    single = jax.jit(jax.vmap(lambda s, k: run_search(env, cfg, s, k)))(
+        roots, rngs
+    )
+    batched = jax.jit(lambda s, k: run_search_batched(env, cfg, s, k))(
+        roots, rngs
+    )
+    _assert_results_equal(single, batched)
+
+
+@pytest.mark.parametrize(
+    "kind,stat_mode",
+    [("wu_uct", "wu"), ("treep", "vl"), ("treep_vc", "wu")],
+)
+def test_batched_matches_vmapped_single_parallel(kind, stat_mode):
+    """Per-tree RNG streams mirror the single engine, so equality holds for
+    every stat mode and policy — including stochastic rollouts and W>1."""
+    env = make_bandit_tree(depth=4, num_actions=3, seed=3)
+    cfg = SearchConfig(
+        num_simulations=32,
+        wave_size=4,
+        max_depth=5,
+        max_sim_steps=5,
+        max_width=3,
+        gamma=0.9,
+        policy=PolicyConfig(kind=kind, r_vl=1.0),
+        stat_mode=stat_mode,
+    )
+    roots, rngs = _roots_and_rngs(env, B=8, seed=11)
+    single = jax.jit(jax.vmap(lambda s, k: run_search(env, cfg, s, k)))(
+        roots, rngs
+    )
+    batched = jax.jit(lambda s, k: run_search_batched(env, cfg, s, k))(
+        roots, rngs
+    )
+    _assert_results_equal(single, batched)
+
+
+def test_kernel_path_matches_reference_path():
+    """use_kernel=True (Pallas) and use_kernel=False (jnp oracle) agree."""
+    env = make_bandit_tree(depth=4, num_actions=4, seed=5)
+    cfg = make_config(
+        "wu_uct", num_simulations=32, wave_size=4, max_depth=6,
+        max_sim_steps=6, max_width=4, gamma=1.0,
+    )
+    roots, rngs = _roots_and_rngs(env, B=8, seed=2)
+    with_kernel = jax.jit(
+        lambda s, k: run_search_batched(env, cfg, s, k, use_kernel=True)
+    )(roots, rngs)
+    without = jax.jit(
+        lambda s, k: run_search_batched(env, cfg, s, k, use_kernel=False)
+    )(roots, rngs)
+    _assert_results_equal(with_kernel, without)
+
+
+@pytest.mark.parametrize("kind", ["uct", "wu_uct", "treep", "treep_vc"])
+def test_kernel_matches_child_scores(kind):
+    """The fused kernel must reproduce child_scores' argmax/max for every
+    policy kind on a fabricated tree with nontrivial N/O/V/VL stats."""
+    rng = np.random.default_rng(hash(kind) % 2**31)
+    B, A = 16, 5
+    cfg = PolicyConfig(kind=kind, beta=1.3, r_vl=0.7, n_vl=1.5)
+    env = make_bandit_tree(depth=3, num_actions=A, seed=1)
+    root_state = env.init(jax.random.PRNGKey(0))
+
+    acts_ref, scores_ref = [], []
+    tables = {k: [] for k in ("n_c", "o_c", "v_c", "vl_c", "n_p", "o_p", "valid")}
+    for i in range(B):
+        tree = init_tree(root_state, capacity=A + 1, num_actions=A)
+        kids = np.where(rng.random(A) < 0.75, np.arange(1, A + 1), -1)
+        kids[rng.integers(A)] = rng.integers(1, A + 1)  # ≥1 valid child
+        n = np.floor(rng.random(A + 1) * 9)
+        o = np.floor(rng.random(A + 1) * 3)
+        v = rng.normal(size=A + 1)
+        vl = rng.random(A + 1)
+        tree = tree._replace(
+            children=tree.children.at[0].set(jnp.asarray(kids, jnp.int32)),
+            parent=tree.parent.at[1:].set(0),
+            N=jnp.asarray(n, jnp.float32),
+            O=jnp.asarray(o, jnp.float32),
+            V=jnp.asarray(v, jnp.float32),
+            VL=jnp.asarray(vl, jnp.float32),
+        )
+        scores = child_scores(tree, jnp.int32(0), cfg)
+        acts_ref.append(int(jnp.argmax(scores)))
+        scores_ref.append(float(jnp.max(scores)))
+
+        safe = np.maximum(kids, 0)
+        tables["n_c"].append(n[safe])
+        tables["o_c"].append(o[safe])
+        tables["v_c"].append(v[safe])
+        tables["vl_c"].append(vl[safe])
+        tables["n_p"].append(n[0])
+        tables["o_p"].append(o[0])
+        tables["valid"].append(kids >= 0)
+
+    act, score = tree_select(
+        jnp.asarray(np.stack(tables["n_c"]), jnp.float32),
+        jnp.asarray(np.stack(tables["o_c"]), jnp.float32),
+        jnp.asarray(np.stack(tables["v_c"]), jnp.float32),
+        jnp.asarray(np.stack(tables["n_p"]), jnp.float32),
+        jnp.asarray(np.stack(tables["o_p"]), jnp.float32),
+        jnp.asarray(np.stack(tables["valid"])),
+        jnp.asarray(np.stack(tables["vl_c"]), jnp.float32),
+        kind=kind, beta=cfg.beta, r_vl=cfg.r_vl, n_vl=cfg.n_vl,
+    )
+    np.testing.assert_array_equal(np.asarray(act), np.asarray(acts_ref))
+    np.testing.assert_allclose(
+        np.asarray(score), np.asarray(scores_ref), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Capacity guard (satellite): reserve at capacity must not corrupt node 0.
+# ---------------------------------------------------------------------------
+
+
+def test_reserve_child_overflow_is_refused():
+    env = make_bandit_tree(depth=3, num_actions=4, seed=0)
+    tree = init_tree(env.init(jax.random.PRNGKey(0)), capacity=2, num_actions=4)
+
+    tree, c1, ok1 = tree_lib.reserve_child(tree, jnp.int32(0), jnp.int32(0))
+    assert bool(ok1) and int(c1) == 1 and int(tree.size) == 2
+    root_children_before = np.asarray(tree.children[0]).copy()
+    parent_before = np.asarray(tree.parent).copy()
+
+    tree, c2, ok2 = tree_lib.reserve_child(tree, jnp.int32(0), jnp.int32(1))
+    assert not bool(ok2)
+    assert int(c2) == 0                       # degraded to the parent node
+    assert int(tree.size) == 2                # no phantom allocation
+    assert bool(tree.overflowed)
+    np.testing.assert_array_equal(np.asarray(tree.parent), parent_before)
+    np.testing.assert_array_equal(
+        np.asarray(tree.children[0]), root_children_before
+    )
+
+
+def test_batched_reserve_overflow_is_refused_per_tree():
+    env = make_bandit_tree(depth=3, num_actions=4, seed=0)
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), 2))
+    bt = btree_lib.init_batched_tree(roots, capacity=2, num_actions=4)
+
+    parents = jnp.zeros((2,), jnp.int32)
+    acts = jnp.array([0, 1], jnp.int32)
+    # Tree 0 reserves (fills to capacity); tree 1 masked out.
+    bt, _, ok = btree_lib.reserve_children(
+        bt, parents, acts, mask=jnp.array([True, False])
+    )
+    np.testing.assert_array_equal(np.asarray(ok), [True, False])
+    # Second round: tree 0 overflows, tree 1 succeeds.
+    bt, child, ok = btree_lib.reserve_children(
+        bt, parents, acts, mask=jnp.array([True, True])
+    )
+    np.testing.assert_array_equal(np.asarray(ok), [False, True])
+    np.testing.assert_array_equal(np.asarray(bt.overflowed), [True, False])
+    np.testing.assert_array_equal(np.asarray(bt.size), [2, 2])
+    assert int(child[0]) == 0                 # degraded to the parent
+
+
+def test_search_result_reports_no_overflow_and_ticks():
+    env = make_bandit_tree(depth=4, num_actions=3, seed=1)
+    cfg = make_config(
+        "wu_uct", num_simulations=32, wave_size=4, max_depth=6,
+        max_sim_steps=6, max_width=3, gamma=1.0,
+    )
+    state = env.init(jax.random.PRNGKey(0))
+    res = jax.jit(lambda s, k: run_search(env, cfg, s, k))(
+        state, jax.random.PRNGKey(1)
+    )
+    assert not bool(res.overflowed)
+    assert int(res.ticks) == cfg.num_simulations // cfg.wave_size
+
+    roots, rngs = _roots_and_rngs(env, B=4)
+    bres = jax.jit(lambda s, k: run_search_batched(env, cfg, s, k))(roots, rngs)
+    assert not np.asarray(bres.overflowed).any()
+    np.testing.assert_array_equal(
+        np.asarray(bres.ticks), [cfg.num_simulations // cfg.wave_size] * 4
+    )
+
+
+def test_rootp_ensemble_merges_committee_stats():
+    from repro.core import run_rootp
+
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    cfg = make_config(
+        "rootp", num_simulations=64, wave_size=8, max_depth=8,
+        max_sim_steps=8, max_width=4, gamma=1.0,
+    )
+    state = env.init(jax.random.PRNGKey(0))
+    res = jax.jit(lambda s, k: run_rootp(env, cfg, s, k))(
+        state, jax.random.PRNGKey(1)
+    )
+    n = np.asarray(res.root_n)
+    assert n.shape == (4,)
+    # K committees of T/K sims each; a few early sims may start at the root.
+    assert cfg.num_simulations - 2 * cfg.wave_size <= n.sum() <= cfg.num_simulations
+    assert 0 <= int(res.action) < 4
