@@ -9,6 +9,7 @@ Each module maps to one paper artifact (see DESIGN.md §7):
   bench_time_breakdown  — Fig. 2(b-c)          (phase time breakdown)
   bench_regret          — beyond-paper exact-regret study (Sec. 4 claims)
   bench_batched_search  — beyond-paper multi-root throughput (searches/sec vs B)
+  bench_batched_async   — beyond-paper batched async-slot engine vs vmap baseline
 
 Roofline tables come from ``python -m benchmarks.roofline`` (reads the
 dry-run artifacts; see EXPERIMENTS.md §Roofline).
@@ -29,6 +30,7 @@ def main() -> None:
 
     from . import (
         bench_async_scaling,
+        bench_batched_async,
         bench_batched_search,
         bench_parallel_algos,
         bench_regret,
@@ -62,6 +64,11 @@ def main() -> None:
         ),
         "batched_search": lambda: bench_batched_search.run(
             num_simulations=32 if args.fast else 64,
+            batch_sizes=(1, 8) if args.fast else (1, 8, 32),
+        ),
+        "batched_async": lambda: bench_batched_async.run(
+            num_simulations=32 if args.fast else 128,
+            wave_size=8 if args.fast else 16,
             batch_sizes=(1, 8) if args.fast else (1, 8, 32),
         ),
     }

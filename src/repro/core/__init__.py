@@ -7,7 +7,11 @@ from .tree import Tree, init_tree
 from .batched_tree import BatchedTree, init_batched_tree
 from .wu_uct import SearchConfig, SearchResult, make_searcher, play_episode, run_search
 from .batched_search import make_batched_searcher, run_search_batched
-from .async_search import make_async_searcher, run_async_search
+from .async_search import AsyncTickTrace, make_async_searcher, run_async_search
+from .batched_async_search import (
+    make_batched_async_searcher,
+    run_async_search_batched,
+)
 from .baselines import (
     make_algorithm,
     make_config,
@@ -17,6 +21,7 @@ from .baselines import (
 )
 
 __all__ = [
+    "AsyncTickTrace",
     "PolicyConfig",
     "Tree",
     "init_tree",
@@ -25,10 +30,12 @@ __all__ = [
     "SearchConfig",
     "SearchResult",
     "make_async_searcher",
+    "make_batched_async_searcher",
     "make_batched_searcher",
     "make_searcher",
     "play_episode",
     "run_async_search",
+    "run_async_search_batched",
     "run_search",
     "run_search_batched",
     "make_algorithm",

@@ -36,6 +36,65 @@ Pytree = Any
 FREE, EXPAND, SIM = 0, 1, 2
 
 
+class AsyncTickTrace(NamedTuple):
+    """Per-master-tick engine snapshots (trace mode; invariant tests).
+
+    Leading axis is the tick index ``K``; the batched engine adds a tree axis
+    ``B`` after it.  ``alive`` marks ticks that actually advanced the search
+    (``t_done < T`` at tick entry); later snapshots are frozen copies.
+    """
+
+    O: jax.Array         # f32[K, M]    in-flight counts after the tick
+    parent: jax.Array    # i32[K, M]    parent pointers (grow with reservations)
+    kind: jax.Array      # i32[K, W]    slot phase (FREE / EXPAND / SIM)
+    sim_node: jax.Array  # i32[K, W]    node each slot's rollout is charged to
+    t_done: jax.Array    # i32[K]       completed simulations so far
+    alive: jax.Array     # bool[K]
+
+
+def tick_snapshot(carry, alive) -> AsyncTickTrace:
+    """One :class:`AsyncTickTrace` row from a master-loop carry.
+
+    Both async engines carry ``(tree, slots, rng, t_launch, t_done, ...)``,
+    so the trace schema is defined once here — single-tree ``Tree``/slots and
+    ``BatchedTree``/batched slots expose the same field names.
+    """
+    tree, slots = carry[0], carry[1]
+    return AsyncTickTrace(
+        O=tree.O, parent=tree.parent, kind=slots.kind,
+        sim_node=slots.sim_node, t_done=carry[4], alive=alive,
+    )
+
+
+def slot_tick_step(env: Environment, gamma: float):
+    """Per-slot one-env-step transition (the parallel part of a master tick).
+
+    Shared by the single engine (vmapped over ``[W]``) and the batched
+    engine (vmapped over the flat ``[B·W]`` axis) so the rollout accounting
+    — which both engines must apply identically for vmap bit-equivalence —
+    is written once.
+    """
+
+    def one(kind, act, state, rollout_done, acc, disc, steps, key):
+        pol_act = env.policy(key, state)
+        a = jnp.where(kind == EXPAND, act, pol_act)
+        nxt, r, done = env.step(state, a)
+        is_sim = kind == SIM
+        live = is_sim & jnp.logical_not(rollout_done)
+        acc = acc + jnp.where(live, disc * r, 0.0)
+        disc = jnp.where(live, disc * gamma, disc)
+        steps = steps + jnp.where(kind != FREE, 1, 0)
+        new_state = jax.tree.map(
+            lambda a_, b_: jnp.where(kind != FREE, a_, b_), nxt, state
+        )
+        rollout_done = jnp.where(
+            kind == EXPAND, done, rollout_done | (is_sim & done)
+        )
+        return new_state, r, done, acc, disc, steps, rollout_done
+
+    return one
+
+
 class _AsyncSlots(NamedTuple):
     kind: jax.Array        # i32[W]  FREE / EXPAND / SIM
     sim_node: jax.Array    # i32[W]  node being evaluated
@@ -52,7 +111,15 @@ def run_async_search(
     cfg: SearchConfig,
     root_state: Pytree,
     rng: jax.Array,
+    trace_ticks: int = 0,
 ) -> SearchResult:
+    """Run one async-slot search.
+
+    With ``trace_ticks > 0`` (a static bound ≥ the actual tick count) the
+    master loop runs as a fixed-length scan instead of a ``while_loop`` and
+    the function returns ``(SearchResult, AsyncTickTrace)`` — identical
+    search output, plus per-tick snapshots for invariant checking.
+    """
     W = cfg.wave_size
     T = cfg.num_simulations
     width = min(cfg.max_width, env.num_actions)
@@ -160,25 +227,7 @@ def run_async_search(
     def tick(slots: _AsyncSlots, rng) -> tuple[_AsyncSlots, Pytree, jax.Array, jax.Array]:
         """Advance every busy slot by one env step (the parallel part)."""
         keys = jax.random.split(rng, W)
-
-        def one(kind, act, state, rollout_done, acc, disc, steps, key):
-            pol_act = env.policy(key, state)
-            a = jnp.where(kind == EXPAND, act, pol_act)
-            nxt, r, done = env.step(state, a)
-            is_sim = kind == SIM
-            live = is_sim & jnp.logical_not(rollout_done)
-            acc = acc + jnp.where(live, disc * r, 0.0)
-            disc = jnp.where(live, disc * cfg.gamma, disc)
-            steps = steps + jnp.where(kind != FREE, 1, 0)
-            new_state = jax.tree.map(
-                lambda a_, b_: jnp.where(kind != FREE, a_, b_), nxt, state
-            )
-            rollout_done = jnp.where(
-                kind == EXPAND, done, rollout_done | (is_sim & done)
-            )
-            return new_state, r, done, acc, disc, steps, rollout_done
-
-        out = jax.vmap(one)(
+        out = jax.vmap(slot_tick_step(env, cfg.gamma))(
             slots.kind, slots.act, slots.state, slots.rollout_done,
             slots.acc, slots.disc, slots.steps, keys,
         )
@@ -250,12 +299,27 @@ def run_async_search(
         tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0),
         jnp.float32(0.0),
     )
-    tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
-        cond, master_iter, init
-    )
+    if trace_ticks > 0:
+        # Same program as the while_loop below (master_iter applied while
+        # t_done < T, carry frozen afterwards), but with a static trip count
+        # so each tick's state can be captured.
+        def scan_body(carry, _):
+            alive = cond(carry)
+            new = jax.tree.map(
+                lambda a, b: jnp.where(alive, a, b), master_iter(carry), carry
+            )
+            return new, tick_snapshot(new, alive)
+
+        final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
+        tree, slots, _, _, _, ticks, max_o = final
+    else:
+        trace = None
+        tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
+            cond, master_iter, init
+        )
 
     root_n, root_v = tree_lib.root_action_stats(tree)
-    return SearchResult(
+    result = SearchResult(
         action=tree_lib.best_root_action(tree),
         root_n=root_n,
         root_v=root_v,
@@ -265,6 +329,7 @@ def run_async_search(
         overflowed=tree.overflowed,
         ticks=ticks,
     )
+    return (result, trace) if trace_ticks > 0 else result
 
 
 def make_async_searcher(env: Environment, cfg: SearchConfig, jit: bool = True):

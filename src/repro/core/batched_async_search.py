@@ -1,0 +1,331 @@
+"""Batched async-slot WU-UCT: ``B`` independent async searches, one program.
+
+:mod:`batched_search` batches the *wave* engine (barrier per wave); this
+module batches :func:`repro.core.async_search.run_async_search` — the engine
+that reproduces the paper's master–worker interleaving, where rollouts settle
+at different ticks and a freed slot is refilled immediately.  ``B`` trees ×
+``W`` async slots advance inside one jitted ``lax.while_loop``:
+
+* **slot ticks** are vmapped over the flat ``[B·W]`` axis, so every busy
+  slot's environment step forms a single batch — exactly the shape a future
+  policy/value-network forward pass wants (one model call per master tick);
+* **refills** route selection through the fused Pallas ``tree_select``
+  kernel as ``[B, A]`` scoring calls (:func:`batched_search.traverse_batched`);
+* **bookkeeping** uses the masked batched ``_mark_in_flight`` / ``_settle``
+  variants in :mod:`batched_tree` — because settles land at different ticks
+  per tree, every update carries a per-tree mask;
+* **RNG streams** are carried per tree with the same split structure as the
+  single engine, so the output is *bit-identical* to
+  ``jax.vmap(run_async_search)`` (tested in
+  ``tests/test_batched_async_search.py``).  The win over plain ``vmap`` is
+  structural: ``vmap`` of the single engine turns every per-slot
+  ``lax.cond`` into a select over the whole tree pytree (O(B·M) memory
+  traffic per slot refill), while this engine performs masked row updates.
+
+The flat ``[B·W]`` slot axis and the ``[B]`` tree axis both shard over the
+``('pod', 'data')`` mesh axes — pass
+:func:`repro.distributed.sharding.constrain_search_batch` as ``constrain``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+from . import batched_tree as btree
+from .async_search import EXPAND, FREE, SIM, slot_tick_step, tick_snapshot
+from .batched_search import (
+    _canonical_keys,
+    _expansion_actions,
+    _mark_in_flight,
+    _settle,
+    _split_each,
+    traverse_batched,
+)
+from .batched_tree import init_batched_tree
+from .wu_uct import SearchConfig, SearchResult
+
+Pytree = Any
+
+
+class _BatchedAsyncSlots(NamedTuple):
+    kind: jax.Array          # i32[B, W]  FREE / EXPAND / SIM
+    sim_node: jax.Array      # i32[B, W]  node being evaluated
+    act: jax.Array           # i32[B, W]  expansion action (EXPAND phase)
+    state: Pytree            # pytree[B, W, ...] current rollout env state
+    rollout_done: jax.Array  # bool[B, W]
+    acc: jax.Array           # f32[B, W]  discounted return accumulator
+    disc: jax.Array          # f32[B, W]
+    steps: jax.Array         # i32[B, W]  simulation steps taken
+
+
+def _freeze_done(alive: jax.Array, new: Pytree, old: Pytree) -> Pytree:
+    """Per-tree carry select — the masking ``vmap`` applies to a batched
+    ``while_loop`` body, done by hand.  Every leaf leads with ``[B]``."""
+    return jax.tree.map(
+        lambda a, b: jnp.where(
+            alive.reshape(alive.shape + (1,) * (a.ndim - 1)), a, b
+        ),
+        new,
+        old,
+    )
+
+
+def run_async_search_batched(
+    env: Environment,
+    cfg: SearchConfig,
+    root_states: Pytree,
+    rngs: jax.Array,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    use_kernel: bool = True,
+    trace_ticks: int = 0,
+) -> SearchResult:
+    """Run ``B`` independent async-slot searches; every field of the returned
+    :class:`SearchResult` carries a leading ``[B]`` axis.
+
+    ``root_states`` is a pytree whose leaves lead with ``[B]``; ``rngs`` is
+    ``jax.random.split(key, B)``.  With ``trace_ticks > 0`` returns
+    ``(SearchResult, AsyncTickTrace)`` with a ``[K, B, ...]`` trace (see
+    :func:`repro.core.async_search.run_async_search`).
+    """
+    W = cfg.wave_size
+    T = cfg.num_simulations
+    width = min(cfg.max_width, env.num_actions)
+    capacity = T + W + 1
+    rngs = _canonical_keys(rngs)
+    B = rngs.shape[0]
+    tree0 = init_batched_tree(root_states, capacity, env.num_actions)
+    bidx = jnp.arange(B)
+    # The single engine ignores deterministic_expansion (always Algorithm 7).
+    exp_cfg = cfg._replace(deterministic_expansion=False)
+
+    def slot_state0() -> _BatchedAsyncSlots:
+        proto = jax.tree.map(
+            lambda x: jnp.zeros((B, W) + jnp.shape(x)[1:], jnp.asarray(x).dtype),
+            root_states,
+        )
+        return _BatchedAsyncSlots(
+            kind=jnp.zeros((B, W), jnp.int32),
+            sim_node=jnp.zeros((B, W), jnp.int32),
+            act=jnp.zeros((B, W), jnp.int32),
+            state=proto,
+            rollout_done=jnp.zeros((B, W), jnp.bool_),
+            acc=jnp.zeros((B, W), jnp.float32),
+            disc=jnp.ones((B, W), jnp.float32),
+            steps=jnp.zeros((B, W), jnp.int32),
+        )
+
+    def set_slot(slots: _BatchedAsyncSlots, j, mask, **kw) -> _BatchedAsyncSlots:
+        """Write slot column ``j`` for trees where ``mask`` holds."""
+        upd = {}
+        for f in slots._fields:
+            v = getattr(slots, f)
+            if f in kw:
+                if f == "state":
+                    v = jax.tree.map(
+                        lambda b, x: b.at[:, j].set(
+                            jnp.where(
+                                mask.reshape((B,) + (1,) * (x.ndim - 1)),
+                                x,
+                                b[:, j],
+                            )
+                        ),
+                        v,
+                        kw[f],
+                    )
+                else:
+                    v = v.at[:, j].set(jnp.where(mask, kw[f], v[:, j]))
+            upd[f] = v
+        return _BatchedAsyncSlots(**upd)
+
+    # ------------------------------------------------------------------
+    # Master tick
+    # ------------------------------------------------------------------
+    def refill(carry):
+        """Fill each tree's FREE slots with fresh selections — slot ``j`` of
+        all ``B`` trees fills simultaneously, one [B, A] kernel call per
+        traversal level."""
+
+        def body(j, c):
+            tree, slots, rng, t_launch, t_done = c
+            rng, k_t, k_e = _split_each(rng, 3)
+            want = (slots.kind[:, j] == FREE) & (t_launch < T)
+
+            nodes = traverse_batched(tree, k_t, cfg, use_kernel)
+            kids = tree.children[bidx, nodes]
+            n_tried = jnp.sum((kids >= 0).astype(jnp.int32), axis=1)
+            is_term = tree.terminal[bidx, nodes]
+            at_depth = tree.depth[bidx, nodes] >= cfg.max_depth
+            needs_exp = (
+                jnp.logical_not(is_term)
+                & jnp.logical_not(at_depth)
+                & (n_tried < width)
+            )
+            act = _expansion_actions(tree, nodes, k_e, exp_cfg)
+            tree, child, reserved = btree.reserve_children(
+                tree, nodes, act, mask=want & needs_exp
+            )
+            needs_exp = needs_exp & reserved
+            sim_node = jnp.where(needs_exp, child, nodes).astype(jnp.int32)
+            tree = _mark_in_flight(tree, sim_node, cfg, mask=want)
+
+            # Terminal hit: settle instantly, slot stays FREE (the paper
+            # counts it as a completed simulation with return 0).
+            tree = _settle(
+                tree, sim_node, jnp.zeros((B,), jnp.float32), cfg,
+                mask=want & is_term,
+            )
+            parent_state = btree.get_state(tree, nodes)
+            slots = set_slot(
+                slots,
+                j,
+                want,
+                kind=jnp.where(
+                    is_term, FREE, jnp.where(needs_exp, EXPAND, SIM)
+                ).astype(jnp.int32),
+                sim_node=sim_node,
+                act=act,
+                state=parent_state,
+                rollout_done=tree.terminal[bidx, sim_node],
+                acc=jnp.zeros((B,), jnp.float32),
+                disc=jnp.ones((B,), jnp.float32),
+                steps=jnp.zeros((B,), jnp.int32),
+            )
+            t_launch = t_launch + want.astype(jnp.int32)
+            t_done = t_done + (want & is_term).astype(jnp.int32)
+            return tree, slots, rng, t_launch, t_done
+
+        return jax.lax.fori_loop(0, W, body, carry)
+
+    def tick(slots: _BatchedAsyncSlots, rng):
+        """Advance every busy slot by one env step — vmapped over the flat
+        [B·W] axis, forming one rollout batch (the future model-forward
+        hook); shards over ('pod', 'data') via ``constrain``."""
+        keys = jax.vmap(lambda k: jax.random.split(k, W))(rng)   # [B, W, ...]
+
+        def flat(x):
+            return x.reshape((B * W,) + x.shape[2:])
+
+        args = (
+            flat(slots.kind), flat(slots.act),
+            jax.tree.map(flat, slots.state),
+            flat(slots.rollout_done), flat(slots.acc), flat(slots.disc),
+            flat(slots.steps), flat(keys),
+        )
+        if constrain is not None:
+            args = constrain(args)
+        out = jax.vmap(slot_tick_step(env, cfg.gamma))(*args)
+        if constrain is not None:
+            out = constrain(out)
+        out = jax.tree.map(lambda x: x.reshape((B, W) + x.shape[1:]), out)
+        new_state, r_edge, done_edge, acc, disc, steps, rollout_done = out
+        slots = slots._replace(
+            state=new_state, acc=acc, disc=disc, steps=steps,
+            rollout_done=rollout_done,
+        )
+        return slots, r_edge, done_edge
+
+    def settle_finished(carry, r_edge, done_edge):
+        """EXPAND→SIM transitions (finalize child) + completed rollouts."""
+
+        def body(j, c):
+            tree, slots, t_done = c
+            kind_j = slots.kind[:, j]
+            is_exp = kind_j == EXPAND
+
+            # EXPAND slots: their env step just produced the child state.
+            st = jax.tree.map(lambda x: x[:, j], slots.state)
+            tree = btree.finalize_children(
+                tree, slots.sim_node[:, j], st, r_edge[:, j], done_edge[:, j],
+                mask=is_exp,
+            )
+            kind2 = jnp.where(is_exp, SIM, kind_j).astype(jnp.int32)
+            steps2 = jnp.where(is_exp, 0, slots.steps[:, j]).astype(jnp.int32)
+
+            # SIM slots finished (episode done or step cap): complete update.
+            fin = (kind2 == SIM) & (
+                slots.rollout_done[:, j] | (steps2 >= cfg.max_sim_steps)
+            )
+            tree = _settle(tree, slots.sim_node[:, j], slots.acc[:, j], cfg,
+                           mask=fin)
+            slots = slots._replace(
+                kind=slots.kind.at[:, j].set(
+                    jnp.where(fin, FREE, kind2).astype(jnp.int32)
+                ),
+                steps=slots.steps.at[:, j].set(steps2),
+            )
+            return tree, slots, t_done + fin.astype(jnp.int32)
+
+        return jax.lax.fori_loop(0, W, body, carry)
+
+    def cond(carry):
+        return carry[4] < T          # t_done, per tree
+
+    def master_iter(carry):
+        tree, slots, rng, t_launch, t_done, ticks, max_o = carry
+        rng, k_tick = _split_each(rng, 2)
+        tree, slots, rng, t_launch, t_done = refill(
+            (tree, slots, rng, t_launch, t_done)
+        )
+        max_o = jnp.maximum(max_o, tree.O[:, 0])
+        slots, r_edge, done_edge = tick(slots, k_tick)
+        tree, slots, t_done = settle_finished(
+            (tree, slots, t_done), r_edge, done_edge
+        )
+        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o
+
+    def step(carry):
+        """One master tick with finished trees frozen — the same per-lane
+        masking ``vmap`` would apply to the single engine's while_loop."""
+        return _freeze_done(cond(carry), master_iter(carry), carry)
+
+    init = (
+        tree0, slot_state0(), rngs,
+        jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
+        jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
+    )
+    if trace_ticks > 0:
+        def scan_body(carry, _):
+            alive = cond(carry)
+            new = step(carry)
+            return new, tick_snapshot(new, alive)
+
+        final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
+        tree, slots, _, _, _, ticks, max_o = final
+    else:
+        trace = None
+        tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
+            lambda c: jnp.any(cond(c)), step, init
+        )
+
+    root_n, root_v = btree.root_action_stats(tree)
+    result = SearchResult(
+        action=btree.best_root_action(tree),
+        root_n=root_n,
+        root_v=root_v,
+        tree_size=tree.size,
+        dup_selections=jnp.zeros((B,), jnp.float32),
+        max_o=max_o,
+        overflowed=tree.overflowed,
+        ticks=ticks,
+    )
+    return (result, trace) if trace_ticks > 0 else result
+
+
+def make_batched_async_searcher(
+    env: Environment,
+    cfg: SearchConfig,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    jit: bool = True,
+    use_kernel: bool = True,
+):
+    """Build ``search(root_states[B], rngs[B]) -> SearchResult[B]``."""
+    fn = functools.partial(
+        run_async_search_batched, env, cfg,
+        constrain=constrain, use_kernel=use_kernel,
+    )
+    return jax.jit(fn) if jit else fn

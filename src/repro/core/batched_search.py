@@ -38,7 +38,6 @@ from ..kernels.tree_select.ref import tree_select_ref
 from . import batched_tree as btree
 from .batched_tree import BatchedTree, init_batched_tree
 from .policies import PolicyConfig, gather_children_tables
-from .tree import NO_NODE
 from .wu_uct import (
     KIND_EXPAND,
     KIND_SIM,
@@ -152,29 +151,30 @@ def _expansion_actions(
 
 
 # ---------------------------------------------------------------------------
-# In-flight statistics (per stat_mode), masked per tree via NO_NODE starts.
+# In-flight statistics (per stat_mode) — masked batched variants live in
+# :mod:`repro.core.batched_tree`; these wrappers unpack the search config.
 # ---------------------------------------------------------------------------
 
 
 def _mark_in_flight(
-    tree: BatchedTree, nodes: jax.Array, cfg: SearchConfig
+    tree: BatchedTree, nodes: jax.Array, cfg: SearchConfig, mask: jax.Array
 ) -> BatchedTree:
-    if cfg.stat_mode == "wu":
-        return btree.incomplete_update(tree, nodes)
-    if cfg.stat_mode == "vl":
-        return btree.add_virtual_loss(tree, nodes, cfg.policy.r_vl)
-    return tree
+    return btree.mark_in_flight(
+        tree, nodes, mask, stat_mode=cfg.stat_mode, r_vl=cfg.policy.r_vl
+    )
 
 
 def _settle(
-    tree: BatchedTree, nodes: jax.Array, rets: jax.Array, cfg: SearchConfig
+    tree: BatchedTree,
+    nodes: jax.Array,
+    rets: jax.Array,
+    cfg: SearchConfig,
+    mask: jax.Array,
 ) -> BatchedTree:
-    if cfg.stat_mode == "wu":
-        return btree.complete_update(tree, nodes, rets, cfg.gamma)
-    if cfg.stat_mode == "vl":
-        tree = btree.remove_virtual_loss(tree, nodes, cfg.policy.r_vl)
-        return btree.backprop_update(tree, nodes, rets, cfg.gamma)
-    return btree.backprop_update(tree, nodes, rets, cfg.gamma)
+    return btree.settle(
+        tree, nodes, rets, mask,
+        stat_mode=cfg.stat_mode, gamma=cfg.gamma, r_vl=cfg.policy.r_vl,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -218,13 +218,8 @@ def _phase1_select(
 
         # Incomplete update as soon as the rollout is initiated (Alg. 1);
         # terminal hits settle immediately with return 0.
-        tree = _mark_in_flight(tree, sim_node, cfg)
-        tree = _settle(
-            tree,
-            jnp.where(is_term, sim_node, NO_NODE),
-            jnp.zeros((B,), jnp.float32),
-            cfg,
-        )
+        tree = _mark_in_flight(tree, sim_node, cfg, mask=jnp.ones((B,), jnp.bool_))
+        tree = _settle(tree, sim_node, jnp.zeros((B,), jnp.float32), cfg, mask=is_term)
 
         slots = _BatchedSlots(
             kind=slots.kind.at[:, j].set(kind),
@@ -311,12 +306,7 @@ def _phase3_settle(
             tree, sim_node, st, r_edge[:, j], done_child[:, j],
             mask=kind == KIND_EXPAND,
         )
-        tree = _settle(
-            tree,
-            jnp.where(kind != KIND_TERMINAL, sim_node, NO_NODE),
-            rets[:, j],
-            cfg,
-        )
+        tree = _settle(tree, sim_node, rets[:, j], cfg, mask=kind != KIND_TERMINAL)
         return tree
 
     return jax.lax.fori_loop(0, W, slot_body, tree)

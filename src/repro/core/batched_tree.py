@@ -228,6 +228,56 @@ def _shift_virtual_loss(
 
 
 # ---------------------------------------------------------------------------
+# Masked stat-mode dispatch.  The batched engines (wave and async) both track
+# in-flight statistics per ``stat_mode``; because settles land at different
+# ticks per tree in the async engine, every call carries an explicit per-tree
+# ``mask`` — masked-out trees contribute no updates (their walk starts at
+# ``NO_NODE`` and freezes immediately).
+# ---------------------------------------------------------------------------
+
+
+def mark_in_flight(
+    tree: BatchedTree,
+    nodes: jax.Array,
+    mask: jax.Array,
+    *,
+    stat_mode: str,
+    r_vl: float,
+) -> BatchedTree:
+    """Per-tree rollout-initiated bookkeeping at ``nodes`` where ``mask``
+    holds: Algorithm 2 (``stat_mode='wu'``), virtual loss (``'vl'``), or
+    nothing (``'none'``)."""
+    targets = jnp.where(mask, nodes, NO_NODE)
+    if stat_mode == "wu":
+        return incomplete_update(tree, targets)
+    if stat_mode == "vl":
+        return add_virtual_loss(tree, targets, r_vl)
+    return tree
+
+
+def settle(
+    tree: BatchedTree,
+    nodes: jax.Array,
+    rets: jax.Array,
+    mask: jax.Array,
+    *,
+    stat_mode: str,
+    gamma: float,
+    r_vl: float,
+) -> BatchedTree:
+    """Per-tree rollout-completed bookkeeping where ``mask`` holds:
+    Algorithm 3 (``'wu'``), virtual-loss removal + plain backprop (``'vl'``),
+    or plain backprop (``'none'``)."""
+    targets = jnp.where(mask, nodes, NO_NODE)
+    if stat_mode == "wu":
+        return complete_update(tree, targets, rets, gamma)
+    if stat_mode == "vl":
+        tree = remove_virtual_loss(tree, targets, r_vl)
+        return backprop_update(tree, targets, rets, gamma)
+    return backprop_update(tree, targets, rets, gamma)
+
+
+# ---------------------------------------------------------------------------
 # Allocation
 # ---------------------------------------------------------------------------
 

@@ -16,7 +16,11 @@ Rules of thumb implemented here:
 * MCTS tree statistics are replicated; wave slots shard over ``(pod, data)``;
 * batched multi-root search (core/batched_search.py) shards its leading
   tree-batch axis ``B`` over ``(pod, data)`` — each DP replica owns a slice
-  of the forest and its wave slots (see :func:`constrain_search_batch`).
+  of the forest and its wave slots (see :func:`constrain_search_batch`);
+* the batched *async* engine (core/batched_async_search.py) additionally
+  flattens its slot ticks to one ``[B·W]`` rollout batch; the same
+  :func:`constrain_search_batch` hook shards that axis (and the future
+  policy/value model forward pass riding it) over ``(pod, data)``.
 """
 
 from __future__ import annotations
@@ -59,10 +63,17 @@ def logical_spec(mesh, *axes) -> P:
     return P(*(keep(a) for a in axes))
 
 
+def ambient_abstract_mesh():
+    """The ambient abstract mesh, or ``None`` on JAX versions without the
+    ``get_abstract_mesh`` API (pre-0.5) — constraints degrade to no-ops."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    return get() if get is not None else None
+
+
 def constrain(x: jax.Array, *axes) -> jax.Array:
     """with_sharding_constraint against the ambient abstract mesh (no-op
     outside a mesh context, so model code stays mesh-agnostic)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = ambient_abstract_mesh()
     if mesh is None or not getattr(mesh, "axis_names", ()):  # unset mesh
         return x
     spec = logical_spec(mesh, *axes)
@@ -83,11 +94,13 @@ def constrain(x: jax.Array, *axes) -> jax.Array:
 def constrain_search_batch(pytree: Pytree) -> Pytree:
     """Shard the leading tree-batch axis of every leaf over ``(pod, data)``.
 
-    This is the ``constrain`` hook for the batched multi-root search engine
-    (:func:`repro.core.batched_search.run_search_batched`): slot tables and
-    per-node state buffers all lead with the ``B`` axis, so one constraint
-    rule covers the whole pytree.  A no-op outside a mesh context, and for
-    leaves whose leading dim does not divide the data axes.
+    This is the ``constrain`` hook for both batched search engines
+    (:func:`repro.core.batched_search.run_search_batched` and
+    :func:`repro.core.batched_async_search.run_async_search_batched`): slot
+    tables and per-node state buffers all lead with the ``B`` axis — and the
+    async engine's flattened ``[B·W]`` slot-tick batch leads with ``B·W`` —
+    so one constraint rule covers the whole pytree.  A no-op outside a mesh
+    context, and for leaves whose leading dim does not divide the data axes.
     """
 
     def one(x):

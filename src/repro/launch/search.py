@@ -8,6 +8,13 @@ Batched multi-root mode (B independent searches in lockstep through the
 fused Pallas tree_select kernel; reports searches/sec):
   PYTHONPATH=src python -m repro.launch.search --env bandit --algo wu_uct \
       --batch 32 --workers 8 --simulations 64
+
+The wave engine is the default; ``--engine async`` selects the async-slot
+engine (the paper's master–worker interleaving: no slot waits for the
+slowest rollout).  Combined with ``--batch`` it runs B trees × W slots in
+one program with the rollout batch flattened to [B·W]:
+  PYTHONPATH=src python -m repro.launch.search --env bandit --algo wu_uct \
+      --batch 32 --workers 16 --simulations 128 --engine async
 """
 
 from __future__ import annotations
@@ -18,7 +25,15 @@ import time
 import jax
 import numpy as np
 
-from repro.core import make_algorithm, make_batched_searcher, make_config, play_episode
+from repro.core import (
+    make_algorithm,
+    make_async_searcher,
+    make_batched_async_searcher,
+    make_batched_searcher,
+    make_config,
+    play_episode,
+)
+from repro.distributed import constrain_search_batch
 from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
 
 
@@ -48,6 +63,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=0,
                     help="B>0: run B root states through the batched "
                          "multi-root engine instead of episode play")
+    ap.add_argument("--engine", default="wave", choices=["wave", "async"],
+                    help="wave: barrier per wave; async: slot-level "
+                         "interleaving (refill the instant a rollout settles)")
     args = ap.parse_args()
 
     env = make_env(args.env)
@@ -65,7 +83,11 @@ def main() -> None:
         if args.algo in ("leafp", "rootp"):
             raise SystemExit(f"--batch supports wave-engine algos, not {args.algo}")
         B = args.batch
-        search = make_batched_searcher(env, cfg)
+        make = (make_batched_async_searcher if args.engine == "async"
+                else make_batched_searcher)
+        # No-op without a mesh; under one, shards the B (and async [B·W])
+        # axis over ('pod', 'data').
+        search = make(env, cfg, constrain=constrain_search_batch)
         roots = jax.vmap(env.init)(
             jax.random.split(jax.random.PRNGKey(args.seed), B)
         )
@@ -75,13 +97,20 @@ def main() -> None:
         res = jax.block_until_ready(search(roots, rngs))
         dt = time.time() - t0
         acts = np.asarray(res.action)
-        print(f"{args.algo} B={B} W={cfg.wave_size} T={cfg.num_simulations}: "
+        print(f"{args.algo}[{args.engine}] B={B} W={cfg.wave_size} "
+              f"T={cfg.num_simulations}: "
               f"{B / dt:.1f} searches/s  wall={dt:.2f}s  "
               f"actions={acts[:min(B, 16)].tolist()}"
               f"{'…' if B > 16 else ''}  overflowed={bool(res.overflowed.any())}")
         return
 
-    searcher = make_algorithm(args.algo, env, cfg)
+    if args.engine == "async":
+        if args.algo in ("leafp", "rootp"):
+            raise SystemExit(f"--engine async supports wave-engine algos, "
+                             f"not {args.algo}")
+        searcher = make_async_searcher(env, cfg)
+    else:
+        searcher = make_algorithm(args.algo, env, cfg)
     rets, steps = [], []
     for ep in range(args.episodes):
         t0 = time.time()

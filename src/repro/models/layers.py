@@ -345,7 +345,9 @@ def moe_block(p, cfg, x):
     ``model`` — the same communication class as a Megatron MLP.  Without a
     mesh the local dense-buffer path below runs (smoke tests, CPU search).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..distributed.sharding import ambient_abstract_mesh
+
+    mesh = ambient_abstract_mesh()
     try:
         axes = dict(mesh.shape)
     except Exception:

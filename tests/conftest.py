@@ -1,9 +1,12 @@
 """Test-collection config: skip property-based modules without hypothesis.
 
-Four modules use hypothesis for property-based sweeps.  It is a dev-only
-dependency (see pyproject.toml ``[project.optional-dependencies] dev``); in
-minimal environments the rest of the suite must still collect and run, so we
-drop those modules from collection instead of erroring at import time.
+Four modules use hypothesis unconditionally for property-based sweeps.  It
+is a dev-only dependency (see pyproject.toml ``[project.optional-dependencies]
+dev``) that CI installs (.github/workflows/ci.yml); in minimal environments
+the rest of the suite must still collect and run, so we drop those modules
+from collection instead of erroring at import time.
+``tests/test_async_invariants.py`` is NOT listed: it guards its hypothesis
+import and falls back to a deterministic case sweep, so it always collects.
 """
 
 import importlib.util

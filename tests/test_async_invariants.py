@@ -1,0 +1,174 @@
+"""Unobserved-sample conservation invariants for the async-slot engines.
+
+The paper's central bookkeeping claim (Sec. 3.1, Algorithms 2–3): ``O_s``
+counts exactly the rollouts that have been *initiated but not completed* in
+the subtree under ``s``.  Both async engines are run in trace mode (a
+fixed-length scan that snapshots the tree after every master tick) and the
+invariant is checked against ground truth reconstructed from the slot table:
+
+* at every master tick, for **every** node ``s``, ``O_s`` equals the number
+  of busy slots whose charged node's root-path passes through ``s`` (the
+  root case: total in-flight mass equals the number of busy slots);
+* at termination all ``O_s`` have returned to zero (every incomplete update
+  was settled by exactly one complete update).
+
+Property-based via hypothesis when installed (CI installs it); otherwise a
+fixed seeded case sweep keeps the same checker running in minimal
+environments.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    PolicyConfig,
+    SearchConfig,
+    run_async_search,
+    run_async_search_batched,
+)
+from repro.core.async_search import FREE
+from repro.envs import make_bandit_tree
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # minimal env: deterministic sweep below still runs
+    HAVE_HYPOTHESIS = False
+
+
+def _make(depth, actions, T, W, sim_steps, seed):
+    env = make_bandit_tree(depth=depth, num_actions=actions, seed=seed)
+    cfg = SearchConfig(
+        num_simulations=T,
+        wave_size=W,
+        max_depth=depth + 2,
+        max_sim_steps=sim_steps,
+        max_width=actions,
+        gamma=0.95,
+        policy=PolicyConfig(kind="wu_uct"),
+        stat_mode="wu",
+    )
+    return env, cfg
+
+
+def _trace_bound(cfg) -> int:
+    # Worst case is fully serial: every simulation pays one expansion tick
+    # plus max_sim_steps rollout ticks before settling.
+    return cfg.num_simulations * (cfg.max_sim_steps + 2) + 2
+
+
+def _check_trace(trace, T, W):
+    """Verify O_s conservation on a [K, B, ...] trace (ground truth: walk
+    every busy slot's charged node to the root through that tick's parent
+    snapshot)."""
+    O = np.asarray(trace.O)
+    parent = np.asarray(trace.parent)
+    kind = np.asarray(trace.kind)
+    sim_node = np.asarray(trace.sim_node)
+    t_done = np.asarray(trace.t_done)
+    K, B, M = O.shape
+
+    assert (t_done[-1] == T).all(), (
+        f"trace bound too small: t_done={t_done[-1]} != {T}"
+    )
+    for b in range(B):
+        for k in range(K):
+            counts = np.zeros(M, np.float32)
+            for w in range(W):
+                if kind[k, b, w] == FREE:
+                    continue
+                n = sim_node[k, b, w]
+                while n >= 0:
+                    counts[n] += 1.0
+                    n = parent[k, b, n]
+            np.testing.assert_array_equal(
+                O[k, b], counts,
+                err_msg=f"O_s != busy-slot subtree count (tree {b}, tick {k})",
+            )
+        # Termination: every incomplete update was settled exactly once.
+        assert (O[-1, b] == 0).all(), f"O mass leaked at termination (tree {b})"
+
+
+def _run_single(depth, actions, T, W, sim_steps, seed):
+    env, cfg = _make(depth, actions, T, W, sim_steps, seed)
+    root = env.init(jax.random.PRNGKey(seed))
+    fn = jax.jit(
+        functools.partial(
+            run_async_search, env, cfg, trace_ticks=_trace_bound(cfg)
+        )
+    )
+    res, trace = fn(root, jax.random.PRNGKey(seed + 1))
+    # Single-engine trace is [K, ...]; give it a B=1 axis for the checker.
+    trace = jax.tree.map(lambda x: np.asarray(x)[:, None], trace)
+    _check_trace(trace, T, W)
+    assert float(np.asarray(res.max_o)) <= W
+
+
+def _run_batched(B, depth, actions, T, W, sim_steps, seed):
+    env, cfg = _make(depth, actions, T, W, sim_steps, seed)
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(seed), B))
+    rngs = jax.random.split(jax.random.PRNGKey(seed + 1), B)
+    fn = jax.jit(
+        functools.partial(
+            run_async_search_batched, env, cfg, trace_ticks=_trace_bound(cfg)
+        )
+    )
+    res, trace = fn(roots, rngs)
+    _check_trace(trace, T, W)
+    assert (np.asarray(res.max_o) <= W).all()
+
+
+# Fixed draws exercising the corners: W=1 (serial), W≥T (slot surplus),
+# branching narrower/wider than the slot count, terminal-dense shallow trees.
+CASES = [
+    (3, 3, 12, 3, 4, 0),
+    (4, 2, 16, 5, 3, 1),
+    (2, 4, 8, 1, 6, 2),
+    (2, 2, 6, 8, 2, 3),
+]
+
+
+@pytest.mark.parametrize("depth,actions,T,W,sim_steps,seed", CASES)
+def test_single_async_o_conservation(depth, actions, T, W, sim_steps, seed):
+    _run_single(depth, actions, T, W, sim_steps, seed)
+
+
+@pytest.mark.parametrize("depth,actions,T,W,sim_steps,seed", CASES[:2])
+@pytest.mark.parametrize("B", [1, 3])
+def test_batched_async_o_conservation(B, depth, actions, T, W, sim_steps, seed):
+    _run_batched(B, depth, actions, T, W, sim_steps, seed)
+
+
+if HAVE_HYPOTHESIS:
+    _params = dict(
+        depth=st.integers(2, 4),
+        actions=st.integers(2, 4),
+        T=st.integers(4, 20),
+        W=st.integers(1, 6),
+        sim_steps=st.integers(2, 5),
+        seed=st.integers(0, 2**16),
+    )
+    _prop = settings(
+        max_examples=8,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+
+    @_prop
+    @given(**_params)
+    def test_single_async_o_conservation_property(
+        depth, actions, T, W, sim_steps, seed
+    ):
+        _run_single(depth, actions, T, W, sim_steps, seed)
+
+    @_prop
+    @given(B=st.integers(1, 4), **_params)
+    def test_batched_async_o_conservation_property(
+        B, depth, actions, T, W, sim_steps, seed
+    ):
+        _run_batched(B, depth, actions, T, W, sim_steps, seed)

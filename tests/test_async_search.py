@@ -52,24 +52,41 @@ def test_async_overlaps_heterogeneous_rollouts():
 
 
 def test_async_matches_wave_engine_quality():
-    """Both engines implement the same statistics; their root visit
-    distributions must broadly agree on an easy problem."""
+    """Both engines implement the same WU statistics; on an easy problem
+    with a known optimum their *trial-averaged* root visit-mass
+    distributions must agree within an explicit tolerance.
+
+    The old single-trial top-3-overlap assertion was seed-sensitive (one
+    draw of two diffuse 25-action distributions).  This version averages a
+    seeded trial battery on the 4-action bandit, where both engines
+    concentrate: measured total-variation distance is ≤ 0.10 across seed
+    bases (tolerance 0.25), and each engine puts ≥ 0.64 of its visit mass
+    on the optimal action (threshold 0.4)."""
     from repro.core import make_searcher
 
-    env = make_tap_game(grid_size=5, num_colors=3, goal_count=6, step_budget=14)
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    _, opt_a, _ = solve_bandit_tree(4, 4, 0, gamma=1.0)
     cfg = make_config(
-        "wu_uct", num_simulations=64, wave_size=8, max_depth=8,
-        max_sim_steps=12, max_width=5, gamma=1.0,
+        "wu_uct", num_simulations=128, wave_size=8, max_depth=8,
+        max_sim_steps=8, max_width=4, gamma=1.0,
     )
     state = env.init(jax.random.PRNGKey(0))
-    wave = make_searcher(env, cfg)(state, jax.random.PRNGKey(1))
-    asy = make_async_searcher(env, cfg)(state, jax.random.PRNGKey(1))
-    n_w = np.asarray(wave.root_n)
-    n_a = np.asarray(asy.root_n)
-    # Top action sets overlap (not exact equality — schedules differ).
-    top_w = set(np.argsort(n_w)[-3:])
-    top_a = set(np.argsort(n_a)[-3:])
-    assert len(top_w & top_a) >= 1
+    wave = make_searcher(env, cfg)
+    asy = make_async_searcher(env, cfg)
     T, W = cfg.num_simulations, cfg.wave_size
-    assert T - 2 * W <= n_w.sum() <= T
-    assert T - 2 * W <= n_a.sum() <= T
+
+    def mean_visit_dist(search):
+        dists = []
+        for s in range(100, 108):
+            n = np.asarray(search(state, jax.random.PRNGKey(s)).root_n)
+            assert T - 2 * W <= n.sum() <= T      # every rollout completes
+            dists.append(n / n.sum())
+        return np.mean(dists, axis=0)
+
+    p_wave = mean_visit_dist(wave)
+    p_async = mean_visit_dist(asy)
+    tv = 0.5 * np.abs(p_wave - p_async).sum()
+    assert tv < 0.25, (tv, p_wave, p_async)
+    # Both engines identify the optimum and commit real mass to it.
+    assert p_wave.argmax() == opt_a and p_async.argmax() == opt_a
+    assert p_wave[opt_a] > 0.4 and p_async[opt_a] > 0.4

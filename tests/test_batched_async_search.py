@@ -1,0 +1,141 @@
+"""Batched async-slot engine: vmap-of-single-tree oracle + kernel parity.
+
+Mirrors ``tests/test_batched_search.py`` for the *async* engine:
+``run_async_search_batched`` carries per-tree RNG streams with exactly the
+single engine's split structure and applies the same per-tick masking
+``vmap`` gives a batched ``while_loop``, so its output must agree *exactly*
+(bit-identical root statistics) with ``jax.vmap`` of
+:func:`repro.core.async_search.run_async_search` — for every batch size,
+under batch padding, for both ``uct`` and ``wu_uct`` score kinds, and with
+the Pallas kernel on or off.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    PolicyConfig,
+    SearchConfig,
+    run_async_search,
+    run_async_search_batched,
+)
+from repro.envs import make_bandit_tree
+
+
+def _cfg(kind="wu_uct", stat_mode="wu", **kw):
+    base = dict(
+        num_simulations=24,
+        wave_size=4,
+        max_depth=5,
+        max_sim_steps=5,
+        max_width=3,
+        gamma=0.9,
+        policy=PolicyConfig(kind=kind),
+        stat_mode=stat_mode,
+    )
+    base.update(kw)
+    return SearchConfig(**base)
+
+
+def _roots_and_rngs(env, B, seed=0):
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(seed), B))
+    rngs = jax.random.split(jax.random.PRNGKey(seed + 1), B)
+    return roots, rngs
+
+
+def _assert_results_equal(single, batched, lanes=slice(None)):
+    for field in ("root_n", "action", "tree_size", "ticks", "max_o"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(single, field))[lanes],
+            np.asarray(getattr(batched, field))[lanes],
+            err_msg=field,
+        )
+    np.testing.assert_allclose(
+        np.asarray(single.root_v)[lanes],
+        np.asarray(batched.root_v)[lanes],
+        rtol=1e-6,
+        err_msg="root_v",
+    )
+
+
+@pytest.mark.parametrize("B", [1, 3, 8])
+@pytest.mark.parametrize(
+    "kind,stat_mode", [("wu_uct", "wu"), ("uct", "none")]
+)
+def test_batched_async_matches_vmapped_single(B, kind, stat_mode):
+    """ISSUE acceptance: bit-identical to jax.vmap(run_async_search) for
+    B ∈ {1, 3, 8} and both score kinds."""
+    env = make_bandit_tree(depth=4, num_actions=3, seed=3)
+    cfg = _cfg(kind, stat_mode)
+    roots, rngs = _roots_and_rngs(env, B, seed=11)
+    single = jax.jit(jax.vmap(lambda s, k: run_async_search(env, cfg, s, k)))(
+        roots, rngs
+    )
+    batched = jax.jit(lambda s, k: run_async_search_batched(env, cfg, s, k))(
+        roots, rngs
+    )
+    _assert_results_equal(single, batched)
+
+
+def test_batched_async_ragged_padding_is_independent():
+    """Trees are independent: a ragged batch padded out to a larger B must
+    reproduce the unpadded lanes bit-exactly (padding lanes change nothing),
+    even though padded lanes keep the while_loop alive for extra ticks."""
+    env = make_bandit_tree(depth=4, num_actions=3, seed=5)
+    # Padding lanes run a *different* (longer) search than the real lanes so
+    # the master loop's trip count genuinely differs between the two runs.
+    cfg = _cfg("wu_uct", "wu", num_simulations=16, wave_size=4)
+    B_real, B_pad = 5, 8
+    roots_pad, rngs_pad = _roots_and_rngs(env, B_pad, seed=21)
+    roots_real = jax.tree.map(lambda x: x[:B_real], roots_pad)
+    rngs_real = rngs_pad[:B_real]
+
+    fn = jax.jit(lambda s, k: run_async_search_batched(env, cfg, s, k))
+    padded = fn(roots_pad, rngs_pad)
+    real = fn(roots_real, rngs_real)
+    _assert_results_equal(padded, real, lanes=slice(0, B_real))
+
+
+def test_batched_async_kernel_path_matches_reference_path():
+    """use_kernel=True (Pallas tree_select) and False (jnp oracle) agree."""
+    env = make_bandit_tree(depth=4, num_actions=4, seed=7)
+    cfg = _cfg("wu_uct", "wu", max_width=4)
+    roots, rngs = _roots_and_rngs(env, B=6, seed=2)
+    with_kernel = jax.jit(
+        lambda s, k: run_async_search_batched(env, cfg, s, k, use_kernel=True)
+    )(roots, rngs)
+    without = jax.jit(
+        lambda s, k: run_async_search_batched(env, cfg, s, k, use_kernel=False)
+    )(roots, rngs)
+    _assert_results_equal(with_kernel, without)
+
+
+def test_batched_async_treep_stat_mode_matches_vmap():
+    """Virtual-loss bookkeeping rides the same masked batched variants."""
+    env = make_bandit_tree(depth=4, num_actions=3, seed=9)
+    cfg = _cfg("treep", "vl")
+    roots, rngs = _roots_and_rngs(env, B=4, seed=31)
+    single = jax.jit(jax.vmap(lambda s, k: run_async_search(env, cfg, s, k)))(
+        roots, rngs
+    )
+    batched = jax.jit(lambda s, k: run_async_search_batched(env, cfg, s, k))(
+        roots, rngs
+    )
+    _assert_results_equal(single, batched)
+
+
+def test_batched_async_every_rollout_completes():
+    """Visit-mass conservation at the roots: each tree's completed child
+    visits sum to T minus at most the early root-sims (all children pending
+    in the first fill), mirroring the single-engine sanity check."""
+    env = make_bandit_tree(depth=4, num_actions=4, seed=0)
+    cfg = _cfg("wu_uct", "wu", num_simulations=32, wave_size=8, max_width=4)
+    roots, rngs = _roots_and_rngs(env, B=6, seed=1)
+    res = jax.jit(lambda s, k: run_async_search_batched(env, cfg, s, k))(
+        roots, rngs
+    )
+    T, W = cfg.num_simulations, cfg.wave_size
+    sums = np.asarray(res.root_n).sum(axis=1)
+    assert ((T - 2 * W <= sums) & (sums <= T)).all(), sums
+    assert not np.asarray(res.overflowed).any()
