@@ -12,8 +12,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import make_config
-from repro.core.async_search import make_async_searcher
+from repro.core import SearchSpec, build_searcher
 from repro.envs import make_tap_game
 
 from .common import row
@@ -26,16 +25,17 @@ def run(num_simulations: int = 64, waves=(1, 4, 16)) -> list[str]:
     rows = []
     base_ticks = None
     for w in waves:
-        cfg = make_config(
-            "wu_uct", num_simulations=num_simulations, wave_size=w,
-            max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
+        spec = SearchSpec(
+            algo="wu_uct", engine="async", num_simulations=num_simulations,
+            wave_size=w, max_depth=10, max_sim_steps=15, max_width=5,
+            gamma=1.0,
         )
-        search = make_async_searcher(env, cfg)
+        search = build_searcher(env, spec)
         res = search(state, key)
         ticks = float(res.ticks)
         if base_ticks is None:
             base_ticks = ticks
-        barrier_bound = (num_simulations // w) * (cfg.max_sim_steps + 1)
+        barrier_bound = (num_simulations // w) * (spec.max_sim_steps + 1)
         rows.append(
             row(
                 f"async_scaling/W={w}",

@@ -16,12 +16,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import (
-    PolicyConfig,
-    SearchConfig,
-    run_async_search,
-    run_async_search_batched,
-)
+from repro.core import PolicyConfig, SearchConfig, SearchSpec, build_searcher
+from repro.core.async_search import run_async_search  # vmap baseline
 from repro.envs import make_bandit_tree
 
 from .common import row, time_fn
@@ -51,10 +47,16 @@ def run(
     cfg = _cfg(num_simulations, wave_size)
     rows = []
 
-    batched = jax.jit(lambda s, k: run_async_search_batched(env, cfg, s, k))
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", num_simulations=num_simulations,
+        wave_size=wave_size, max_depth=cfg.max_depth,
+        max_sim_steps=cfg.max_sim_steps, max_width=cfg.max_width,
+        gamma=cfg.gamma,
+    )
     vmapped = jax.jit(jax.vmap(lambda s, k: run_async_search(env, cfg, s, k)))
 
     for B in batch_sizes:
+        batched = build_searcher(env, spec._replace(batch=B))
         roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), B))
         rngs = jax.random.split(jax.random.PRNGKey(1), B)
 

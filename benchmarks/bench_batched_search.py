@@ -14,7 +14,8 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from repro.core import SearchConfig, PolicyConfig, run_search, run_search_batched
+from repro.core import SearchConfig, PolicyConfig, SearchSpec, build_searcher
+from repro.core.wu_uct import run_search  # vmap baseline: engine internals
 from repro.envs import make_bandit_tree
 
 from .common import row, time_fn
@@ -44,10 +45,16 @@ def run(
     cfg = _cfg(num_simulations, wave_size)
     rows = []
 
-    batched = jax.jit(lambda s, k: run_search_batched(env, cfg, s, k))
+    spec = SearchSpec(
+        algo="wu_uct", num_simulations=num_simulations,
+        wave_size=cfg.wave_size, max_depth=cfg.max_depth,
+        max_sim_steps=cfg.max_sim_steps, max_width=cfg.max_width,
+        gamma=cfg.gamma,
+    )
     vmapped = jax.jit(jax.vmap(lambda s, k: run_search(env, cfg, s, k)))
 
     for B in batch_sizes:
+        batched = build_searcher(env, spec._replace(batch=B))
         roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), B))
         rngs = jax.random.split(jax.random.PRNGKey(1), B)
 

@@ -1,0 +1,91 @@
+"""Model-backed evaluation throughput: one LM forward per master tick.
+
+The claim under test (the ROADMAP follow-up made real by
+``core/evaluators.py``): with a :class:`~repro.core.evaluators.ModelEvaluator`
+plugged into the async engines through ``build_searcher``, every master tick
+evaluates ALL ``[B·W]`` in-flight rollout slots with **one** batched
+policy-LM forward — versus the default rollout evaluation over the token
+env, whose per-slot ``env.policy`` + ``env.step`` lower to three forwards
+per slot step.
+
+Rows: ``model_eval_B{n}`` / ``rollout_eval_B{n}`` with derived searches/sec,
+plus a speedup row.  Exact forward-per-tick counting is asserted in
+``tests/test_facade.py``; this file measures the wall-clock consequence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core import ModelEvaluator, SearchSpec, build_searcher
+from repro.envs.token_env import make_token_env
+from repro.models import init_params
+
+from .common import row, time_fn
+
+BATCH_SIZES = (1, 4)
+
+
+def _tiny_lm(vocab: int = 64):
+    cfg = dataclasses.replace(
+        get_reduced("llama3-8b"), vocab_size=vocab, num_layers=1,
+        d_model=32, num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+    )
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def run(
+    num_simulations: int = 16,
+    wave_size: int = 4,
+    batch_sizes: tuple[int, ...] = BATCH_SIZES,
+    top_k: int = 4,
+) -> list[str]:
+    cfg, params = _tiny_lm()
+    prompt = jnp.asarray([3, 5, 7], jnp.int32)
+    env = make_token_env(cfg, params, prompt, max_len=16, top_k=top_k,
+                         eos_token=1)
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", num_simulations=num_simulations,
+        wave_size=wave_size, max_depth=6, max_sim_steps=6, max_width=top_k,
+        gamma=1.0,
+    )
+    model_ev = ModelEvaluator(cfg, params, top_k=top_k, eos_token=1)
+    rows = []
+
+    for B in batch_sizes:
+        bspec = spec._replace(batch=B) if B > 1 else spec
+        model_search = build_searcher(env, bspec, evaluator=model_ev)
+        rollout_search = build_searcher(env, bspec)
+        if B > 1:
+            roots = jax.vmap(env.init)(
+                jax.random.split(jax.random.PRNGKey(0), B)
+            )
+            rngs = jax.random.split(jax.random.PRNGKey(1), B)
+        else:
+            roots = env.init(jax.random.PRNGKey(0))
+            rngs = jax.random.PRNGKey(1)
+
+        t_m = time_fn(model_search, roots, rngs, warmup=1, iters=3)
+        rows.append(row(f"model_eval_B{B}", t_m, f"{B / t_m:.2f} searches/s"))
+        t_r = time_fn(rollout_search, roots, rngs, warmup=1, iters=3)
+        rows.append(
+            row(f"rollout_eval_B{B}", t_r, f"{B / t_r:.2f} searches/s")
+        )
+        rows.append(
+            row(f"model_eval_speedup_B{B}", 0.0, f"{t_r / t_m:.2f}x vs rollout")
+        )
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for r in run():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import make_algorithm, make_config, play_episode
-from repro.core.wu_uct import make_searcher
+from repro.core import SearchSpec, build_searcher, play_episode
 from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
 
 from .common import row
@@ -47,8 +46,9 @@ def run(
             )
             if algo == "treep":
                 kw["r_vl"] = 1.0
-            cfg = make_config(algo, **kw)
-            searcher = make_algorithm(algo, env, cfg)
+            spec = SearchSpec(algo=algo, **kw)
+            cfg = spec.config
+            searcher = build_searcher(env, spec)
             rets = []
             for ep in range(episodes):
                 ret, _, _ = play_episode(

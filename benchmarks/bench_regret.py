@@ -17,7 +17,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import make_algorithm, make_config
+from repro.core import SearchSpec, build_searcher
 from repro.envs import make_bandit_tree
 from repro.envs.bandit_tree import solve_bandit_tree
 
@@ -42,12 +42,12 @@ def run(
     }
     for name, (algo, kw) in variants.items():
         w = 1 if name == "uct_seq" else workers
-        cfg = make_config(
-            algo, num_simulations=num_simulations, wave_size=w,
+        spec = SearchSpec(
+            algo=algo, num_simulations=num_simulations, wave_size=w,
             max_depth=depth + 1, max_sim_steps=depth + 1,
             max_width=actions, gamma=1.0, **kw,
         )
-        fn = make_algorithm(algo, env, cfg)
+        fn = build_searcher(env, spec)
         regrets, dups, opt_shares = [], [], []
         state = env.init(jax.random.PRNGKey(0))
         for t in range(trials):

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import make_config, make_searcher
+from repro.core import SearchSpec, build_searcher
 from repro.envs import make_tap_game
 
 from .common import time_fn, row
@@ -28,11 +28,11 @@ def run(num_simulations: int = 64, waves=(1, 2, 4, 8, 16)) -> list[str]:
     rows = []
     base_t = None
     for w in waves:
-        cfg = make_config(
-            "wu_uct", num_simulations=num_simulations, wave_size=w,
+        spec = SearchSpec(
+            algo="wu_uct", num_simulations=num_simulations, wave_size=w,
             max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
         )
-        search = make_searcher(env, cfg)
+        search = build_searcher(env, spec)
         t = time_fn(search, state, key, warmup=1, iters=3)
         if base_t is None:
             base_t = t

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import make_config
+from repro.core import SearchSpec
 from repro.core.wu_uct import _phase1_select, _phase2_work, _phase3_settle
 from repro.core import tree as tree_lib
 from repro.envs import make_tap_game
@@ -21,10 +21,10 @@ from .common import time_fn, row
 
 def run(wave_size: int = 16, num_simulations: int = 64) -> list[str]:
     env = make_tap_game(grid_size=6, num_colors=4, goal_count=10, step_budget=20)
-    cfg = make_config(
-        "wu_uct", num_simulations=num_simulations, wave_size=wave_size,
+    cfg = SearchSpec(
+        algo="wu_uct", num_simulations=num_simulations, wave_size=wave_size,
         max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
-    )
+    ).config
     key = jax.random.PRNGKey(0)
     state = env.init(key)
     capacity = cfg.num_simulations + cfg.wave_size + 1

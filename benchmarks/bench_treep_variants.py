@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import make_algorithm, make_config, play_episode
+from repro.core import SearchSpec, build_searcher, play_episode
 from repro.envs import make_bandit_tree, make_tap_game
 
 from .common import row
@@ -25,21 +25,21 @@ def run(workers: int = 16, num_simulations: int = 64, episodes: int = 3):
     }
     rows = []
     for env_name, env in envs.items():
-        variants = {"wu_uct": make_config(
-            "wu_uct", num_simulations=num_simulations, wave_size=workers,
+        variants = {"wu_uct": SearchSpec(
+            algo="wu_uct", num_simulations=num_simulations, wave_size=workers,
             max_depth=12, max_sim_steps=15,
             max_width=min(8, env.num_actions), gamma=0.99,
         )}
         for r in (1.0, 2.0, 3.0):
-            variants[f"treep_vc_r{int(r)}"] = make_config(
-                "treep_vc", num_simulations=num_simulations,
+            variants[f"treep_vc_r{int(r)}"] = SearchSpec(
+                algo="treep_vc", num_simulations=num_simulations,
                 wave_size=workers, max_depth=12, max_sim_steps=15,
                 max_width=min(8, env.num_actions), gamma=0.99,
                 r_vl=r, n_vl=r,
             )
-        for name, cfg in variants.items():
-            algo = "wu_uct" if name == "wu_uct" else "treep_vc"
-            searcher = make_algorithm(algo, env, cfg)
+        for name, spec in variants.items():
+            cfg = spec.config
+            searcher = build_searcher(env, spec)
             rets = []
             for ep in range(episodes):
                 ret, _, _ = play_episode(

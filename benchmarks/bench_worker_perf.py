@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 import jax
 
-from repro.core import make_config, play_episode
+from repro.core import SearchSpec, play_episode
 from repro.envs import make_tap_game
 
 from .common import row
@@ -30,10 +30,10 @@ def run(
         env = make_tap_game(**kw)
         means = []
         for w in waves:
-            cfg = make_config(
-                "wu_uct", num_simulations=num_simulations, wave_size=w,
+            cfg = SearchSpec(
+                algo="wu_uct", num_simulations=num_simulations, wave_size=w,
                 max_depth=10, max_sim_steps=15, max_width=5, gamma=1.0,
-            )
+            ).config
             steps = []
             for ep in range(episodes):
                 _, moves, done = play_episode(

@@ -32,6 +32,7 @@ def main() -> None:
         bench_async_scaling,
         bench_batched_async,
         bench_batched_search,
+        bench_model_eval,
         bench_parallel_algos,
         bench_regret,
         bench_speedup,
@@ -70,6 +71,11 @@ def main() -> None:
             num_simulations=32 if args.fast else 128,
             wave_size=8 if args.fast else 16,
             batch_sizes=(1, 8) if args.fast else (1, 8, 32),
+        ),
+        "model_eval": lambda: bench_model_eval.run(
+            num_simulations=8 if args.fast else 16,
+            wave_size=4,
+            batch_sizes=(1,) if args.fast else (1, 4),
         ),
     }
     selected = args.only.split(",") if args.only else list(modules)

@@ -21,15 +21,15 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import make_config, play_episode
+from repro.core import SearchSpec, play_episode
 from repro.envs import make_tap_game
 
 
 def gameplay_features(env, budget, n_games, seed, step_budget):
-    cfg = make_config(
-        "wu_uct", num_simulations=budget, wave_size=min(budget, 10),
+    cfg = SearchSpec(
+        algo="wu_uct", num_simulations=budget, wave_size=min(budget, 10),
         max_depth=10, max_sim_steps=12, max_width=5, gamma=1.0,
-    )
+    ).config
     passes, ratios = [], []
     for g in range(n_games):
         ret, moves, done = play_episode(

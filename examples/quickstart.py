@@ -1,5 +1,9 @@
 """Quickstart: WU-UCT on the tap game, compared against sequential UCT.
 
+Everything goes through the one front door: describe the search with a
+``SearchSpec`` and build it with ``build_searcher`` — the same surface
+covers every engine (wave/async), batch mode and baseline algorithm.
+
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
@@ -7,7 +11,7 @@ import time
 
 import jax
 
-from repro.core import make_config, make_searcher, play_episode
+from repro.core import SearchSpec, build_searcher, play_episode
 from repro.envs import make_tap_game
 
 
@@ -18,28 +22,32 @@ def main() -> None:
     print(f"env: {env.name}; initial grid:\n{state.grid}\n")
 
     for algo, wave in [("uct", 1), ("wu_uct", 16)]:
-        cfg = make_config(
-            algo, num_simulations=64, wave_size=wave, max_depth=10,
+        spec = SearchSpec(
+            algo=algo, num_simulations=64, wave_size=wave, max_depth=10,
             max_sim_steps=15, max_width=5, gamma=1.0,
         )
-        search = make_searcher(env, cfg)
+        search = build_searcher(env, spec)
         res = jax.block_until_ready(search(state, key))  # compile
         t0 = time.perf_counter()
         res = jax.block_until_ready(search(state, jax.random.PRNGKey(1)))
         dt = time.perf_counter() - t0
+        cfg = spec.config
         print(
-            f"{algo:8s} W={wave:2d}: action={int(res.action)} "
+            f"{algo:8s} W={cfg.wave_size:2d}: action={int(res.action)} "
             f"(cell {int(res.action) // 6},{int(res.action) % 6}) "
             f"tree_size={int(res.tree_size)} wall={dt * 1e3:.1f}ms "
             f"master_rounds={cfg.num_simulations // cfg.wave_size}"
         )
 
     print("\nplaying one full episode with WU-UCT (16 in-flight workers)...")
-    cfg = make_config(
-        "wu_uct", num_simulations=64, wave_size=16, max_depth=10,
+    spec = SearchSpec(
+        algo="wu_uct", num_simulations=64, wave_size=16, max_depth=10,
         max_sim_steps=15, max_width=5, gamma=1.0,
     )
-    ret, moves, done = play_episode(env, cfg, jax.random.PRNGKey(7), max_moves=20)
+    ret, moves, done = play_episode(
+        env, spec.config, jax.random.PRNGKey(7), max_moves=20,
+        searcher=build_searcher(env, spec),
+    )
     print(f"episode return={ret:.3f}, game steps={moves}, solved={done}")
 
 

@@ -7,9 +7,12 @@ Pipeline:
   1. build a reduced llama3-family policy LM (any --arch works);
   2. briefly train it on a synthetic Zipf stream so it has real structure;
   3. serve a batch of requests through the continuous-batching engine;
-  4. run WU-UCT over the token environment (simulations = policy rollouts,
-     rewards = policy log-likelihood) and compare the searched continuation's
-     reward against greedy decoding — search should win.
+  4. run WU-UCT over the token environment through the search front door
+     (``SearchSpec`` + ``build_searcher``) and compare the searched
+     continuation's reward against greedy decoding — search should win;
+  5. serve a *batch* of search requests through ``SearchService`` — B
+     independent trees in one program, all rollout slots evaluated by one
+     model forward per master tick (``ModelEvaluator``).
 
 Run:  PYTHONPATH=src python examples/serve_search.py [--arch llama3-8b]
 """
@@ -23,10 +26,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core import make_config, make_searcher
+from repro.core import SearchSpec, build_searcher
 from repro.envs.token_env import make_token_env
-from repro.models import forward, init_params
-from repro.serving import ServeConfig, ServingEngine
+from repro.models import init_params
+from repro.serving import SearchService, ServeConfig, ServingEngine
 from repro.training import AdamWConfig, SyntheticStream, TrainConfig, adamw_init, make_train_step
 
 
@@ -69,11 +72,11 @@ def main() -> None:
     # --- 3. WU-UCT token search vs greedy decoding ------------------------
     prompt = jnp.asarray(prompts[0], jnp.int32)
     env = make_token_env(cfg, params, prompt, max_len=20, top_k=6, eos_token=1)
-    scfg = make_config(
-        "wu_uct", num_simulations=32, wave_size=8, max_depth=10,
+    spec = SearchSpec(
+        algo="wu_uct", num_simulations=32, wave_size=8, max_depth=10,
         max_sim_steps=10, max_width=6, gamma=1.0,
     )
-    search = make_searcher(env, scfg)
+    search = build_searcher(env, spec)
 
     state = env.init(jax.random.PRNGKey(0))
     # Greedy continuation reward (action 0 = top-1 token at each step).
@@ -96,6 +99,21 @@ def main() -> None:
     print(
         f"token search: greedy logp={g_reward:.3f}  "
         f"WU-UCT logp={s_reward:.3f}  (search ≥ greedy expected)"
+    )
+
+    # --- 4. batched search serving (one model forward per master tick) ----
+    service = SearchService(
+        cfg, params,
+        SearchSpec(algo="wu_uct", engine="async", batch=4,
+                   num_simulations=16, wave_size=4, max_depth=8,
+                   max_sim_steps=8, max_width=6, gamma=1.0),
+        top_k=6, max_len=20, eos_token=1,
+    )
+    t0 = time.time()
+    tokens, res = service.decide(prompts[:4], jax.random.PRNGKey(2))
+    print(
+        f"search service: {len(tokens)} searched next-tokens {tokens} "
+        f"in {time.time() - t0:.1f}s (B=4 trees, one LM forward per tick)"
     )
 
 

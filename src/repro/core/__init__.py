@@ -1,46 +1,112 @@
 # The paper's primary contribution: WU-UCT parallel MCTS (wave-scheduled,
-# SPMD-shardable) plus the baseline parallelizations it is compared against,
-# and the batched multi-root engine (B independent trees in lockstep through
-# the fused Pallas tree_select kernel).
+# SPMD-shardable) plus the baseline parallelizations it is compared against.
+#
+# Public surface: describe the search with a `SearchSpec` and build it with
+# `build_searcher(env, spec)` — one front door for every engine (wave/async),
+# batch mode (single-root or B-tree lockstep through the fused Pallas
+# tree_select kernel) and algorithm (WU-UCT + App. B baselines).  Leaf
+# evaluation is pluggable via `Evaluator` (`RolloutEvaluator` is the default
+# env rollout; `ModelEvaluator` batches every master tick into one LM
+# forward).
+#
+# The old per-engine entry points below are deprecated shims for one
+# release; call `build_searcher` instead.
+import functools as _functools
+import warnings as _warnings
+
+from .api import SearchSpec, as_search_config, build_searcher, make_config
+from .evaluators import Evaluator, ModelEvaluator, RolloutEvaluator
 from .policies import PolicyConfig
 from .tree import Tree, init_tree
 from .batched_tree import BatchedTree, init_batched_tree
-from .wu_uct import SearchConfig, SearchResult, make_searcher, play_episode, run_search
-from .batched_search import make_batched_searcher, run_search_batched
-from .async_search import AsyncTickTrace, make_async_searcher, run_async_search
-from .batched_async_search import (
-    make_batched_async_searcher,
-    run_async_search_batched,
-)
-from .baselines import (
-    make_algorithm,
-    make_config,
-    run_leafp,
-    run_rootp,
-    run_treep,
-)
+from .wu_uct import SearchConfig, SearchResult, play_episode
+from .async_search import AsyncTickTrace
+from . import async_search as _async_search
+from . import baselines as _baselines
+from . import batched_async_search as _batched_async_search
+from . import batched_search as _batched_search
+from . import wu_uct as _wu_uct
+
+
+def _deprecated(name: str, fn, instead: str):
+    @_functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        _warnings.warn(
+            f"repro.core.{name} is deprecated; use {instead} "
+            "(see repro.core.api).",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return fn(*args, **kwargs)
+
+    return wrapper
+
+
+# --- deprecated engine entry points (one release of shim) -------------------
+_SPEC = "build_searcher(env, SearchSpec(...))"
+run_search = _deprecated(
+    "run_search", _wu_uct.run_search, f"{_SPEC} with engine='wave'")
+run_search_batched = _deprecated(
+    "run_search_batched", _batched_search.run_search_batched,
+    f"{_SPEC} with engine='wave', batch=B")
+run_async_search = _deprecated(
+    "run_async_search", _async_search.run_async_search,
+    f"{_SPEC} with engine='async'")
+run_async_search_batched = _deprecated(
+    "run_async_search_batched", _batched_async_search.run_async_search_batched,
+    f"{_SPEC} with engine='async', batch=B")
+run_leafp = _deprecated(
+    "run_leafp", _baselines.run_leafp, f"{_SPEC} with algo='leafp'")
+run_treep = _deprecated(
+    "run_treep", _baselines.run_treep, f"{_SPEC} with algo='treep'")
+run_rootp = _deprecated(
+    "run_rootp", _baselines.run_rootp, f"{_SPEC} with algo='rootp'")
+make_searcher = _deprecated(
+    "make_searcher", _wu_uct.make_searcher, f"{_SPEC} with engine='wave'")
+make_async_searcher = _deprecated(
+    "make_async_searcher", _async_search.make_async_searcher,
+    f"{_SPEC} with engine='async'")
+make_batched_searcher = _deprecated(
+    "make_batched_searcher", _batched_search.make_batched_searcher,
+    f"{_SPEC} with engine='wave', batch=B")
+make_batched_async_searcher = _deprecated(
+    "make_batched_async_searcher",
+    _batched_async_search.make_batched_async_searcher,
+    f"{_SPEC} with engine='async', batch=B")
+make_algorithm = _deprecated(
+    "make_algorithm", _baselines.make_algorithm, f"{_SPEC} with algo=...")
 
 __all__ = [
+    # the front door
+    "SearchSpec",
+    "as_search_config",
+    "build_searcher",
+    "make_config",
+    # evaluators (pluggable leaf evaluation)
+    "Evaluator",
+    "RolloutEvaluator",
+    "ModelEvaluator",
+    # configs / results / trees
     "AsyncTickTrace",
     "PolicyConfig",
+    "SearchConfig",
+    "SearchResult",
     "Tree",
     "init_tree",
     "BatchedTree",
     "init_batched_tree",
-    "SearchConfig",
-    "SearchResult",
+    "play_episode",
+    # deprecated shims
+    "make_algorithm",
     "make_async_searcher",
     "make_batched_async_searcher",
     "make_batched_searcher",
     "make_searcher",
-    "play_episode",
     "run_async_search",
     "run_async_search_batched",
-    "run_search",
-    "run_search_batched",
-    "make_algorithm",
-    "make_config",
     "run_leafp",
     "run_rootp",
+    "run_search",
+    "run_search_batched",
     "run_treep",
 ]

@@ -1,0 +1,213 @@
+"""The one front door for search: ``SearchSpec`` → ``build_searcher``.
+
+The paper keeps one principled tree policy (WU-UCT's eq. 4) while the
+expensive expansion/simulation work is farmed out to parallel workers.  This
+module exposes that one idea through one configuration surface instead of
+seven divergent entry points:
+
+* :class:`SearchSpec` — a frozen spec subsuming ``SearchConfig`` + the
+  algorithm, engine and batch choice.  ``engine='wave'`` is the barrier-per-
+  wave engine; ``engine='async'`` the slot-level master–worker interleaving;
+  ``batch=B>0`` runs ``B`` independent trees in lockstep through the fused
+  Pallas ``tree_select`` kernel.  ``algo`` selects WU-UCT or any baseline
+  parallelization the paper compares against (App. B) — RootP/Ensemble-UCT
+  rides the same surface rather than a bespoke runner ("Ensemble UCT Needs
+  High Exploitation").
+* :func:`build_searcher` — dispatches to the right engine and returns the
+  jitted searcher.  Leaf evaluation is pluggable via
+  :class:`repro.core.evaluators.Evaluator` (the tree-statistics vs. leaf-
+  evaluation split of "On Effective Parallelization of MCTS"): the default
+  reproduces today's ``env.policy`` rollouts bit-for-bit, while
+  :class:`~repro.core.evaluators.ModelEvaluator` batches every master
+  tick's ``[B·W]`` in-flight slots into one policy/value LM forward.
+
+The old per-engine entry points (``run_search``, ``run_async_search``, …)
+remain importable from :mod:`repro.core` as deprecated shims for one release.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+from ..envs.base import Environment
+from .async_search import run_async_search
+from .baselines import run_leafp, run_rootp
+from .batched_async_search import run_async_search_batched
+from .batched_search import run_search_batched
+from .evaluators import Evaluator, ModelEvaluator
+from .policies import PolicyConfig
+from .wu_uct import SearchConfig, run_search
+
+Pytree = Any
+
+ALGOS = ("wu_uct", "uct", "treep", "treep_vc", "leafp", "rootp")
+ENGINES = ("wave", "async")
+
+
+class SearchSpec(NamedTuple):
+    """Frozen, hashable description of one search program.
+
+    ``algo`` picks the tree policy + in-flight statistics mode; ``engine``
+    the scheduling (wave barrier vs. async slot interleaving); ``batch`` the
+    number of independent root states per call (0 = single-root).  The
+    remaining fields are the paper's search knobs, flattened so a spec is a
+    plain value — no nested ``PolicyConfig`` to thread by hand.
+    """
+
+    algo: str = "wu_uct"            # wu_uct | uct | treep | treep_vc | leafp | rootp
+    engine: str = "wave"            # wave | async
+    batch: int = 0                  # B > 0: multi-root lockstep engines
+    num_simulations: int = 128      # T_max
+    wave_size: int = 16             # W — in-flight workers (K for rootp)
+    max_depth: int = 100            # d_max
+    max_sim_steps: int = 100        # simulation rollout cap (App. D: 100)
+    max_width: int = 20             # search-width cap (paper: 5 tap / 20 Atari)
+    gamma: float = 0.99
+    beta: float = 1.0               # exploration constant β
+    r_vl: float = 1.0               # TreeP virtual loss
+    n_vl: float = 1.0               # TreeP-VC virtual pseudo-count (eq. 7)
+    expand_coin: float = 0.5        # traversal rule (iii) stop probability
+    value_mix: float = 0.0          # R = (1-m)·R_simu + m·V(s)  (App. D: 0.5)
+    deterministic_expansion: bool = False  # first-untried action (tests)
+    use_kernel: bool = True         # Pallas tree_select vs. jnp reference
+
+    @property
+    def config(self) -> SearchConfig:
+        return as_search_config(self)
+
+
+# Per-algo (policy kind, stat_mode).  Baselines score with plain UCT — no
+# in-flight statistics exist for leafp/rootp; treep_vc's eq. (7) consumes the
+# in-flight count c == O, so it runs 'wu' bookkeeping.
+_ALGO_MODES = {
+    "wu_uct": ("wu_uct", "wu"),
+    "uct": ("uct", "none"),
+    "treep": ("treep", "vl"),
+    "treep_vc": ("treep_vc", "wu"),
+    "leafp": ("uct", "none"),
+    "rootp": ("uct", "none"),
+}
+
+
+def as_search_config(spec: SearchSpec) -> SearchConfig:
+    """Lower a :class:`SearchSpec` to the engines' :class:`SearchConfig`."""
+    if spec.algo not in ALGOS:
+        raise ValueError(f"unknown algo {spec.algo!r}; expected one of {ALGOS}")
+    if spec.engine not in ENGINES:
+        raise ValueError(
+            f"unknown engine {spec.engine!r}; expected one of {ENGINES}"
+        )
+    kind, stat_mode = _ALGO_MODES[spec.algo]
+    return SearchConfig(
+        num_simulations=spec.num_simulations,
+        # Sequential UCT is the W=1 special case by definition (eq. 2).
+        wave_size=1 if spec.algo == "uct" else spec.wave_size,
+        max_depth=spec.max_depth,
+        max_sim_steps=spec.max_sim_steps,
+        max_width=spec.max_width,
+        gamma=spec.gamma,
+        policy=PolicyConfig(
+            kind=kind, beta=spec.beta, r_vl=spec.r_vl, n_vl=spec.n_vl
+        ),
+        stat_mode=stat_mode,
+        expand_coin=spec.expand_coin,
+        value_mix=spec.value_mix,
+        deterministic_expansion=spec.deterministic_expansion,
+    )
+
+
+def build_searcher(
+    env: Environment,
+    spec: SearchSpec,
+    *,
+    evaluator: Optional[Evaluator] = None,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    jit: bool = True,
+):
+    """Build the searcher described by ``spec`` for ``env``.
+
+    Returns a jitted callable:
+
+    * ``batch == 0`` — ``search(root_state, rng) -> SearchResult``;
+    * ``batch  > 0`` — ``search(root_states, rngs) -> SearchResult`` with a
+      leading ``[B]`` axis on every field (``root_states`` leaves lead with
+      ``[B]``; ``rngs = jax.random.split(key, B)``).
+
+    ``evaluator`` plugs the leaf evaluation (default: classic env rollouts,
+    bit-identical to the direct engine calls — oracle-tested in
+    ``tests/test_facade.py``).  ``constrain`` installs sharding constraints
+    (:func:`repro.distributed.sharding.constrain_search_batch`) on the
+    engines that shard their slot batch.
+    """
+    cfg = as_search_config(spec)
+    if spec.batch < 0:
+        raise ValueError(f"batch must be >= 0, got {spec.batch}")
+    if isinstance(evaluator, ModelEvaluator) and (
+        evaluator.top_k != env.num_actions
+    ):
+        # Actions are ranks into the evaluator's top-K table; a mismatched
+        # table would silently alias several env actions onto one token.
+        raise ValueError(
+            f"ModelEvaluator(top_k={evaluator.top_k}) does not match "
+            f"env.num_actions={env.num_actions}"
+        )
+    if spec.algo in ("leafp", "rootp"):
+        if spec.engine == "async":
+            raise ValueError(
+                f"engine='async' supports wave-engine algos, not {spec.algo!r}"
+            )
+        if spec.batch > 0:
+            raise ValueError(
+                f"batch > 0 supports wave-engine algos, not {spec.algo!r} "
+                "(rootp is itself a K-tree batched committee)"
+            )
+
+    if spec.batch > 0:
+        run = (
+            run_async_search_batched if spec.engine == "async"
+            else run_search_batched
+        )
+        fn = functools.partial(
+            run, env, cfg, constrain=constrain, use_kernel=spec.use_kernel,
+            evaluator=evaluator,
+        )
+    elif spec.engine == "async":
+        fn = functools.partial(
+            run_async_search, env, cfg, evaluator=evaluator,
+            use_kernel=spec.use_kernel,
+        )
+    elif spec.algo == "leafp":
+        fn = functools.partial(
+            run_leafp, env, cfg, evaluator=evaluator,
+            use_kernel=spec.use_kernel,
+        )
+    elif spec.algo == "rootp":
+        fn = functools.partial(
+            run_rootp, env, cfg, use_kernel=spec.use_kernel, evaluator=evaluator
+        )
+    else:
+        fn = functools.partial(
+            run_search, env, cfg, constrain=constrain, evaluator=evaluator,
+            use_kernel=spec.use_kernel,
+        )
+    return jax.jit(fn) if jit else fn
+
+
+def make_config(algorithm: str, **kw) -> SearchConfig:
+    """Legacy config builder, re-expressed over :class:`SearchSpec`.
+
+    ``kw`` takes the flattened spec fields (``beta=…``, ``r_vl=…``, search
+    budgets); explicit ``policy=`` / ``stat_mode=`` overrides are honored
+    for back-compat with the old per-algo builders.
+    """
+    policy = kw.pop("policy", None)
+    stat_mode = kw.pop("stat_mode", None)
+    cfg = as_search_config(SearchSpec(algo=algorithm, **kw))
+    if policy is not None:
+        cfg = cfg._replace(policy=policy)
+    if stat_mode is not None:
+        cfg = cfg._replace(stat_mode=stat_mode)
+    return cfg

@@ -20,20 +20,19 @@ The entire search is one jitted ``lax.while_loop`` program.
 from __future__ import annotations
 
 import functools
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..envs.base import Environment
 from . import tree as tree_lib
+from .evaluators import EXPAND, FREE, SIM, Evaluator, RolloutEvaluator
 from .policies import expansion_action
 from .tree import Tree
 from .wu_uct import SearchConfig, SearchResult, traverse, _mark_in_flight, _settle
 
 Pytree = Any
-
-FREE, EXPAND, SIM = 0, 1, 2
 
 
 class AsyncTickTrace(NamedTuple):
@@ -69,30 +68,11 @@ def tick_snapshot(carry, alive) -> AsyncTickTrace:
 def slot_tick_step(env: Environment, gamma: float):
     """Per-slot one-env-step transition (the parallel part of a master tick).
 
-    Shared by the single engine (vmapped over ``[W]``) and the batched
-    engine (vmapped over the flat ``[B·W]`` axis) so the rollout accounting
-    — which both engines must apply identically for vmap bit-equivalence —
-    is written once.
+    The implementation lives in
+    :class:`repro.core.evaluators.RolloutEvaluator`; this wrapper remains
+    for callers building the classic per-slot step without an evaluator.
     """
-
-    def one(kind, act, state, rollout_done, acc, disc, steps, key):
-        pol_act = env.policy(key, state)
-        a = jnp.where(kind == EXPAND, act, pol_act)
-        nxt, r, done = env.step(state, a)
-        is_sim = kind == SIM
-        live = is_sim & jnp.logical_not(rollout_done)
-        acc = acc + jnp.where(live, disc * r, 0.0)
-        disc = jnp.where(live, disc * gamma, disc)
-        steps = steps + jnp.where(kind != FREE, 1, 0)
-        new_state = jax.tree.map(
-            lambda a_, b_: jnp.where(kind != FREE, a_, b_), nxt, state
-        )
-        rollout_done = jnp.where(
-            kind == EXPAND, done, rollout_done | (is_sim & done)
-        )
-        return new_state, r, done, acc, disc, steps, rollout_done
-
-    return one
+    return RolloutEvaluator(env)._one_step(gamma)
 
 
 class _AsyncSlots(NamedTuple):
@@ -112,6 +92,8 @@ def run_async_search(
     root_state: Pytree,
     rng: jax.Array,
     trace_ticks: int = 0,
+    evaluator: Optional[Evaluator] = None,
+    use_kernel: bool = True,
 ) -> SearchResult:
     """Run one async-slot search.
 
@@ -119,18 +101,19 @@ def run_async_search(
     master loop runs as a fixed-length scan instead of a ``while_loop`` and
     the function returns ``(SearchResult, AsyncTickTrace)`` — identical
     search output, plus per-tick snapshots for invariant checking.
+    ``evaluator`` owns the per-slot stepping (default: the classic env
+    rollout; :class:`repro.core.evaluators.ModelEvaluator` turns every
+    master tick into one batched model forward).
     """
     W = cfg.wave_size
     T = cfg.num_simulations
     width = min(cfg.max_width, env.num_actions)
     capacity = T + W + 1
+    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
     tree0 = tree_lib.init_tree(root_state, capacity, env.num_actions)
 
     def slot_state0():
-        proto = jax.tree.map(
-            lambda x: jnp.zeros((W,) + jnp.shape(x), jnp.asarray(x).dtype),
-            root_state,
-        )
+        proto = evaluator.init_state(root_state, (W,))
         return _AsyncSlots(
             kind=jnp.zeros((W,), jnp.int32),
             sim_node=jnp.zeros((W,), jnp.int32),
@@ -168,7 +151,7 @@ def run_async_search(
 
             def do_fill(op):
                 tree, slots, t_launch, t_done = op
-                node = traverse(tree, k_t, cfg)
+                node = traverse(tree, k_t, cfg, use_kernel)
                 kids = tree.children[node]
                 n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
                 is_term = tree.terminal[node]
@@ -227,8 +210,8 @@ def run_async_search(
     def tick(slots: _AsyncSlots, rng) -> tuple[_AsyncSlots, Pytree, jax.Array, jax.Array]:
         """Advance every busy slot by one env step (the parallel part)."""
         keys = jax.random.split(rng, W)
-        out = jax.vmap(slot_tick_step(env, cfg.gamma))(
-            slots.kind, slots.act, slots.state, slots.rollout_done,
+        out = evaluator.tick(
+            cfg, slots.kind, slots.act, slots.state, slots.rollout_done,
             slots.acc, slots.disc, slots.steps, keys,
         )
         new_state, r_edge, done_edge, acc, disc, steps, rollout_done = out
@@ -332,6 +315,14 @@ def run_async_search(
     return (result, trace) if trace_ticks > 0 else result
 
 
-def make_async_searcher(env: Environment, cfg: SearchConfig, jit: bool = True):
-    fn = functools.partial(run_async_search, env, cfg)
+def make_async_searcher(
+    env: Environment,
+    cfg: SearchConfig,
+    jit: bool = True,
+    evaluator: Optional[Evaluator] = None,
+    use_kernel: bool = True,
+):
+    fn = functools.partial(
+        run_async_search, env, cfg, evaluator=evaluator, use_kernel=use_kernel
+    )
     return jax.jit(fn) if jit else fn

@@ -14,7 +14,7 @@ comparisons isolate the *algorithm*, exactly as the paper does (App. D:
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from ..envs.base import Environment
 from . import tree as tree_lib
 from .batched_search import run_search_batched
+from .evaluators import Evaluator, RolloutEvaluator
 from .policies import PolicyConfig, expansion_action
 from .tree import Tree
 from .wu_uct import (
@@ -31,43 +32,11 @@ from .wu_uct import (
     SearchResult,
     _phase2_work,
     _Slots,
-    rollout_return,
     run_search,
     traverse,
 )
 
 Pytree = Any
-
-
-# ---------------------------------------------------------------------------
-# Config builders — each baseline is the wave engine in a different mode.
-# ---------------------------------------------------------------------------
-
-
-def wu_uct_config(**kw) -> SearchConfig:
-    kw.setdefault("policy", PolicyConfig(kind="wu_uct", beta=kw.pop("beta", 1.0)))
-    return SearchConfig(stat_mode="wu", **kw)
-
-
-def sequential_uct_config(**kw) -> SearchConfig:
-    kw.setdefault("policy", PolicyConfig(kind="uct", beta=kw.pop("beta", 1.0)))
-    kw["wave_size"] = 1
-    return SearchConfig(stat_mode="none", **kw)
-
-
-def treep_config(r_vl: float = 1.0, **kw) -> SearchConfig:
-    beta = kw.pop("beta", 1.0)
-    kw.setdefault("policy", PolicyConfig(kind="treep", beta=beta, r_vl=r_vl))
-    return SearchConfig(stat_mode="vl", **kw)
-
-
-def treep_vc_config(r_vl: float = 1.0, n_vl: float = 1.0, **kw) -> SearchConfig:
-    beta = kw.pop("beta", 1.0)
-    kw.setdefault(
-        "policy", PolicyConfig(kind="treep_vc", beta=beta, r_vl=r_vl, n_vl=n_vl)
-    )
-    # eq. (7) consumes the in-flight count c == O, so run 'wu' bookkeeping.
-    return SearchConfig(stat_mode="wu", **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -81,6 +50,8 @@ def run_leafp(
     cfg: SearchConfig,
     root_state: Pytree,
     rng: jax.Array,
+    evaluator: Optional[Evaluator] = None,
+    use_kernel: bool = True,
 ) -> SearchResult:
     W = cfg.wave_size
     if cfg.num_simulations % W != 0:
@@ -88,6 +59,7 @@ def run_leafp(
     num_rounds = cfg.num_simulations // W
     capacity = num_rounds + 2
     width = min(cfg.max_width, env.num_actions)
+    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
     tree = tree_lib.init_tree(root_state, capacity, env.num_actions)
     # LeafP scores with plain UCT — no in-flight statistics exist.
     cfg = cfg._replace(policy=cfg.policy._replace(kind="uct"), stat_mode="none")
@@ -95,7 +67,7 @@ def run_leafp(
     def round_body(i, carry):
         tree, rng = carry
         rng, k_t, k_e, k_sim = jax.random.split(rng, 4)
-        node = traverse(tree, k_t, cfg)
+        node = traverse(tree, k_t, cfg, use_kernel)
         kids = tree.children[node]
         n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
         is_term = tree.terminal[node]
@@ -129,7 +101,7 @@ def run_leafp(
         start_state = tree_lib.get_state(tree, sim_node)
         start_done = tree.terminal[sim_node]
         rets = jax.vmap(
-            lambda k: rollout_return(env, cfg, start_state, start_done, k)
+            lambda k: evaluator.rollout(cfg, start_state, start_done, k)
         )(jax.random.split(k_sim, W))
 
         def bp_body(j, t):
@@ -157,10 +129,16 @@ def run_leafp(
 # ---------------------------------------------------------------------------
 
 
-def run_treep(env, cfg, root_state, rng, constrain=None) -> SearchResult:
+def run_treep(
+    env, cfg, root_state, rng, constrain=None, evaluator=None,
+    use_kernel=True,
+) -> SearchResult:
     if cfg.stat_mode != "vl":
         cfg = cfg._replace(stat_mode="vl", policy=cfg.policy._replace(kind="treep"))
-    return run_search(env, cfg, root_state, rng, constrain=constrain)
+    return run_search(
+        env, cfg, root_state, rng, constrain=constrain, evaluator=evaluator,
+        use_kernel=use_kernel,
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -178,6 +156,7 @@ def run_rootp(
     root_state: Pytree,
     rng: jax.Array,
     use_kernel: bool = True,
+    evaluator: Optional[Evaluator] = None,
 ) -> SearchResult:
     K = cfg.wave_size
     if cfg.num_simulations % K != 0:
@@ -192,7 +171,8 @@ def run_rootp(
         lambda x: jnp.broadcast_to(x, (K,) + jnp.shape(x)), root_state
     )
     sub = run_search_batched(
-        env, sub_cfg, roots, jax.random.split(rng, K), use_kernel=use_kernel
+        env, sub_cfg, roots, jax.random.split(rng, K),
+        use_kernel=use_kernel, evaluator=evaluator,
     )
     n_tot = jnp.sum(sub.root_n, axis=0)
     v_tot = jnp.where(
@@ -217,27 +197,20 @@ def run_rootp(
 ALGORITHMS = {
     "wu_uct": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
     "uct": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
-    "leafp": lambda env, cfg, s, r, **kw: run_leafp(env, cfg, s, r),
+    "leafp": lambda env, cfg, s, r, **kw: run_leafp(env, cfg, s, r, **kw),
     "treep": run_treep,
     "treep_vc": lambda env, cfg, s, r, **kw: run_search(env, cfg, s, r, **kw),
-    "rootp": lambda env, cfg, s, r, **kw: run_rootp(env, cfg, s, r),
+    "rootp": lambda env, cfg, s, r, **kw: run_rootp(env, cfg, s, r, **kw),
 }
 
 
 def make_config(algorithm: str, **kw) -> SearchConfig:
-    builders = {
-        "wu_uct": wu_uct_config,
-        "uct": sequential_uct_config,
-        "leafp": lambda **k: SearchConfig(
-            stat_mode="none", policy=PolicyConfig(kind="uct", beta=k.pop("beta", 1.0)), **k
-        ),
-        "treep": treep_config,
-        "treep_vc": treep_vc_config,
-        "rootp": lambda **k: SearchConfig(
-            stat_mode="none", policy=PolicyConfig(kind="uct", beta=k.pop("beta", 1.0)), **k
-        ),
-    }
-    return builders[algorithm](**kw)
+    """Per-algorithm :class:`SearchConfig` builder, re-expressed over the
+    :class:`repro.core.api.SearchSpec` lowering (one source of truth for
+    policy kind + stat-mode per algorithm)."""
+    from .api import make_config as _make_config  # api imports this module
+
+    return _make_config(algorithm, **kw)
 
 
 def make_algorithm(algorithm: str, env: Environment, cfg: SearchConfig, jit=True):

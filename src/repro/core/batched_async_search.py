@@ -37,7 +37,8 @@ import jax.numpy as jnp
 
 from ..envs.base import Environment
 from . import batched_tree as btree
-from .async_search import EXPAND, FREE, SIM, slot_tick_step, tick_snapshot
+from .async_search import EXPAND, FREE, SIM, tick_snapshot
+from .evaluators import Evaluator, RolloutEvaluator
 from .batched_search import (
     _canonical_keys,
     _expansion_actions,
@@ -83,6 +84,7 @@ def run_async_search_batched(
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
     use_kernel: bool = True,
     trace_ticks: int = 0,
+    evaluator: Optional[Evaluator] = None,
 ) -> SearchResult:
     """Run ``B`` independent async-slot searches; every field of the returned
     :class:`SearchResult` carries a leading ``[B]`` axis.
@@ -90,7 +92,10 @@ def run_async_search_batched(
     ``root_states`` is a pytree whose leaves lead with ``[B]``; ``rngs`` is
     ``jax.random.split(key, B)``.  With ``trace_ticks > 0`` returns
     ``(SearchResult, AsyncTickTrace)`` with a ``[K, B, ...]`` trace (see
-    :func:`repro.core.async_search.run_async_search`).
+    :func:`repro.core.async_search.run_async_search`).  ``evaluator`` owns
+    the flat ``[B·W]`` slot stepping — with
+    :class:`repro.core.evaluators.ModelEvaluator`, every master tick is one
+    batched model forward over all in-flight slots.
     """
     W = cfg.wave_size
     T = cfg.num_simulations
@@ -98,15 +103,15 @@ def run_async_search_batched(
     capacity = T + W + 1
     rngs = _canonical_keys(rngs)
     B = rngs.shape[0]
+    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
     tree0 = init_batched_tree(root_states, capacity, env.num_actions)
     bidx = jnp.arange(B)
     # The single engine ignores deterministic_expansion (always Algorithm 7).
     exp_cfg = cfg._replace(deterministic_expansion=False)
 
     def slot_state0() -> _BatchedAsyncSlots:
-        proto = jax.tree.map(
-            lambda x: jnp.zeros((B, W) + jnp.shape(x)[1:], jnp.asarray(x).dtype),
-            root_states,
+        proto = evaluator.init_state(
+            jax.tree.map(lambda x: x[0], root_states), (B, W)
         )
         return _BatchedAsyncSlots(
             kind=jnp.zeros((B, W), jnp.int32),
@@ -218,7 +223,7 @@ def run_async_search_batched(
         )
         if constrain is not None:
             args = constrain(args)
-        out = jax.vmap(slot_tick_step(env, cfg.gamma))(*args)
+        out = evaluator.tick(cfg, *args)
         if constrain is not None:
             out = constrain(out)
         out = jax.tree.map(lambda x: x.reshape((B, W) + x.shape[1:]), out)
@@ -322,10 +327,11 @@ def make_batched_async_searcher(
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
     jit: bool = True,
     use_kernel: bool = True,
+    evaluator: Optional[Evaluator] = None,
 ):
     """Build ``search(root_states[B], rngs[B]) -> SearchResult[B]``."""
     fn = functools.partial(
         run_async_search_batched, env, cfg,
-        constrain=constrain, use_kernel=use_kernel,
+        constrain=constrain, use_kernel=use_kernel, evaluator=evaluator,
     )
     return jax.jit(fn) if jit else fn

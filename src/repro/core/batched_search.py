@@ -37,6 +37,7 @@ from ..kernels.tree_select.ops import tree_select
 from ..kernels.tree_select.ref import tree_select_ref
 from . import batched_tree as btree
 from .batched_tree import BatchedTree, init_batched_tree
+from .evaluators import Evaluator, RolloutEvaluator
 from .policies import PolicyConfig, gather_children_tables
 from .wu_uct import (
     KIND_EXPAND,
@@ -44,7 +45,6 @@ from .wu_uct import (
     KIND_TERMINAL,
     SearchConfig,
     SearchResult,
-    rollout_return,
 )
 
 Pytree = Any
@@ -252,10 +252,12 @@ def _phase2_work(
     slots: _BatchedSlots,
     rngs: jax.Array,
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    evaluator: Optional[Evaluator] = None,
 ):
     """Expansion env-step + simulation rollout for all B × W slots at once —
     the compute that shards over the ('pod', 'data') mesh axes."""
     W = cfg.wave_size
+    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
     keys = jax.vmap(lambda k: jax.random.split(k, W))(rngs)   # [B, W, ...]
 
     def per_tree(states_b, terminal_b, kinds, stop_nodes, sim_nodes, acts, kb):
@@ -269,7 +271,7 @@ def _phase2_work(
                 jax.tree.map(lambda x: x[sim_node], states_b),
             )
             start_done = jnp.where(is_exp, done_child, terminal_b[sim_node])
-            ret = rollout_return(env, cfg, start_state, start_done, key)
+            ret = evaluator.rollout(cfg, start_state, start_done, key)
             return child_state, r_edge, done_child, ret
 
         return jax.vmap(one_slot)(kinds, stop_nodes, sim_nodes, acts, kb)
@@ -324,6 +326,7 @@ def run_search_batched(
     rngs: jax.Array,
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
     use_kernel: bool = True,
+    evaluator: Optional[Evaluator] = None,
 ) -> SearchResult:
     """Run ``B`` independent searches; every field of the returned
     :class:`SearchResult` carries a leading ``[B]`` axis.
@@ -345,7 +348,7 @@ def run_search_batched(
         tree, slots, dups = _phase1_select(tree, k_sel, cfg, use_kernel)
         max_o = jnp.maximum(max_o, tree.O[:, 0])
         child_states, r_edge, done_child, rets = _phase2_work(
-            env, cfg, tree, slots, k_sim, constrain
+            env, cfg, tree, slots, k_sim, constrain, evaluator
         )
         tree = _phase3_settle(
             tree, cfg, slots, child_states, r_edge, done_child, rets
@@ -376,9 +379,11 @@ def make_batched_searcher(
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
     jit: bool = True,
     use_kernel: bool = True,
+    evaluator: Optional[Evaluator] = None,
 ):
     """Build ``search(root_states[B], rngs[B]) -> SearchResult[B]``."""
     fn = functools.partial(
-        run_search_batched, env, cfg, constrain=constrain, use_kernel=use_kernel
+        run_search_batched, env, cfg, constrain=constrain,
+        use_kernel=use_kernel, evaluator=evaluator,
     )
     return jax.jit(fn) if jit else fn

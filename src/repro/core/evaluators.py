@@ -1,0 +1,339 @@
+"""Evaluators: the pluggable leaf-evaluation side of parallel MCTS.
+
+"On Effective Parallelization of Monte Carlo Tree Search" frames parallel
+MCTS as two separable concerns — tree statistics (the master's bookkeeping,
+which WU-UCT keeps principled via ``O_s``) and leaf evaluation (the expensive
+expansion/simulation work farmed out to workers).  This module owns the
+second concern: every engine in :mod:`repro.core` drives its in-flight slots
+through an :class:`Evaluator` instead of hard-wiring ``env.policy`` /
+``env.step`` into its loop body.
+
+Two implementations ship:
+
+* :class:`RolloutEvaluator` — the classic random/scripted-policy rollout
+  (``env.policy`` chooses simulation actions; ``env.step`` advances).  This
+  is a *bit-identical* port of the per-slot stepping that previously lived
+  as ``wu_uct.rollout_return`` and ``async_search.slot_tick_step``.
+* :class:`ModelEvaluator` — policy/value-LM evaluation over the token
+  environment (:mod:`repro.envs.token_env`): all in-flight slots of a master
+  tick are scored by **one** batched model forward (``models.forward``)
+  instead of three per-slot forwards hidden inside ``env.policy`` +
+  ``env.step``.  Plugged into the async engines' flat ``[B·W]`` tick batch,
+  this realizes the ROADMAP follow-up: every master tick feeds one model
+  forward pass.
+
+The evaluator contract (``init_state`` / ``tick`` / ``rollout`` / ``value``)
+is identical across implementations, so engines stay evaluator-agnostic and
+:func:`repro.core.api.build_searcher` can swap them freely.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..envs.base import Environment
+
+Pytree = Any
+
+# Slot phases, shared with the async engines (async_search re-exports them).
+FREE, EXPAND, SIM = 0, 1, 2
+
+
+def slot_accounting(gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
+                    steps):
+    """Per-slot discounted-return bookkeeping after one environment step.
+
+    The one accounting rule every evaluator must apply identically for the
+    engines' vmap bit-equivalence to hold: only live SIM slots accumulate,
+    FREE slots freeze their state, EXPAND slots report the edge transition.
+    Shape-polymorphic (scalar per-slot or leading batch axes) so the same
+    code serves ``RolloutEvaluator._one_step`` and the batched
+    ``ModelEvaluator.tick``.
+    """
+    is_sim = kind == SIM
+    live = is_sim & jnp.logical_not(rollout_done)
+    acc = acc + jnp.where(live, disc * r, 0.0)
+    disc = jnp.where(live, disc * gamma, disc)
+    steps = steps + jnp.where(kind != FREE, 1, 0)
+    busy = kind != FREE
+    new_state = jax.tree.map(
+        lambda a_, b_: jnp.where(
+            busy.reshape(busy.shape + (1,) * (a_.ndim - busy.ndim)), a_, b_
+        ),
+        nxt,
+        state,
+    )
+    rollout_done = jnp.where(
+        kind == EXPAND, done, rollout_done | (is_sim & done)
+    )
+    return new_state, r, done, acc, disc, steps, rollout_done
+
+
+class Evaluator:
+    """Protocol for environment/model evaluation inside a search engine.
+
+    Engines call four methods; ``cfg`` is the engine's ``SearchConfig``
+    (only ``gamma`` / ``max_sim_steps`` / ``value_mix`` are read):
+
+    * ``init_state(example_state, prefix)`` — allocate zeroed per-slot env
+      state buffers with leading ``prefix`` axes (the async slot pools);
+    * ``tick(cfg, kind, act, state, rollout_done, acc, disc, steps, keys)``
+      — advance a whole batch of in-flight slots by one environment step.
+      Leading axis is *all* in-flight slots of a master tick: ``[W]`` for
+      the single async engine, the flat ``[B·W]`` for the batched one.
+      Returns ``(new_state, r, done, acc, disc, steps, rollout_done)``;
+    * ``rollout(cfg, state, already_done, rng)`` — full discounted
+      simulation return from one state (the wave engines vmap this per
+      slot);
+    * ``value(state)`` — bootstrap value ``V(s)`` for truncated rollouts.
+    """
+
+    env: Optional[Environment] = None
+
+    def init_state(self, example_state: Pytree, prefix: tuple) -> Pytree:
+        """Zeroed per-slot state buffers shaped ``prefix + leaf.shape``."""
+        return jax.tree.map(
+            lambda x: jnp.zeros(
+                tuple(prefix) + jnp.shape(x), jnp.asarray(x).dtype
+            ),
+            example_state,
+        )
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
+        raise NotImplementedError
+
+    def value(self, state: Pytree) -> jax.Array:
+        return jnp.float32(0.0)
+
+    def has_value(self) -> bool:
+        """Whether :meth:`value` is a real estimator; gates the rollout's
+        truncation bootstrap and ``value_mix`` blending (a zero-constant
+        value must not rescale returns)."""
+        return False
+
+    def rollout(self, cfg, state, already_done, rng) -> jax.Array:
+        """Default full rollout: tick a single SIM slot until done/step cap.
+
+        Implementations with a cheaper native rollout (the classic env
+        rollout) override this; model-backed evaluators get it for free —
+        under the wave engines' slot ``vmap`` the per-step forward becomes a
+        batched forward over all slots.
+        """
+
+        def cond(c):
+            _, done, _, _, _, steps = c
+            return jnp.logical_not(done[0]) & (steps[0] < cfg.max_sim_steps)
+
+        def body(c):
+            st, done, acc, disc, rng, steps = c
+            rng, k = jax.random.split(rng)
+            st, _, _, acc, disc, steps, done = self.tick(
+                cfg,
+                jnp.full((1,), SIM, jnp.int32),
+                jnp.zeros((1,), jnp.int32),
+                st, done, acc, disc, steps, k[None],
+            )
+            return st, done, acc, disc, rng, steps
+
+        init = (
+            jax.tree.map(lambda x: x[None], state),
+            jnp.asarray(already_done, jnp.bool_)[None],
+            jnp.zeros((1,), jnp.float32),
+            jnp.ones((1,), jnp.float32),
+            rng,
+            jnp.zeros((1,), jnp.int32),
+        )
+        st, done, acc, disc, _, _ = jax.lax.while_loop(cond, body, init)
+        ret = acc[0]
+        if self.has_value():
+            final = jax.tree.map(lambda x: x[0], st)
+            ret = ret + disc[0] * jnp.where(done[0], 0.0, self.value(final))
+            if cfg.value_mix > 0.0:
+                v0 = jnp.where(already_done, 0.0, self.value(state))
+                ret = (1.0 - cfg.value_mix) * ret + cfg.value_mix * v0
+        return ret
+
+
+# ---------------------------------------------------------------------------
+# RolloutEvaluator — today's env.policy behavior, bit-identical.
+# ---------------------------------------------------------------------------
+
+
+class RolloutEvaluator(Evaluator):
+    """Classic rollout evaluation: ``env.policy`` acts, ``env.step`` advances.
+
+    The per-slot stepping and discounted-return accounting are verbatim the
+    code that previously lived inside the engines, so every engine's default
+    behavior (and RNG stream) is unchanged.
+    """
+
+    def __init__(self, env: Environment):
+        self.env = env
+
+    def _one_step(self, gamma: float) -> Callable:
+        """Per-slot one-env-step transition (the parallel part of a master
+        tick) — shared by the single engine (vmapped over ``[W]``) and the
+        batched engine (vmapped over the flat ``[B·W]`` axis)."""
+        env = self.env
+
+        def one(kind, act, state, rollout_done, acc, disc, steps, key):
+            pol_act = env.policy(key, state)
+            a = jnp.where(kind == EXPAND, act, pol_act)
+            nxt, r, done = env.step(state, a)
+            return slot_accounting(
+                gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
+                steps,
+            )
+
+        return one
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
+        return jax.vmap(self._one_step(cfg.gamma))(
+            kind, act, state, rollout_done, acc, disc, steps, keys
+        )
+
+    def rollout(self, cfg, state, already_done, rng) -> jax.Array:
+        """Discounted simulation return with optional value bootstrap/mixing
+        (paper Fig. 1(a) "simulation"; App. D truncation bootstrap)."""
+        env = self.env
+
+        def cond(carry):
+            _, done, _, _, _, steps = carry
+            return jnp.logical_not(done) & (steps < cfg.max_sim_steps)
+
+        def body(carry):
+            state, done, acc, disc, rng, steps = carry
+            rng, k = jax.random.split(rng)
+            a = env.policy(k, state)
+            nxt, r, d = env.step(state, a)
+            acc = acc + disc * r
+            disc = disc * cfg.gamma
+            return nxt, done | d, acc, disc, rng, steps + 1
+
+        init = (
+            state,
+            jnp.asarray(already_done, jnp.bool_),
+            jnp.float32(0.0),
+            jnp.float32(1.0),
+            rng,
+            jnp.int32(0),
+        )
+        final_state, done, acc, disc, _, _ = jax.lax.while_loop(
+            cond, body, init
+        )
+
+        if env.value_fn is not None:
+            # Truncation bootstrap: R_simu = Σ γ^i r_i + γ^T V(s_T) (App. D).
+            acc = acc + disc * jnp.where(done, 0.0, env.value_fn(final_state))
+            if cfg.value_mix > 0.0:
+                v0 = jnp.where(already_done, 0.0, env.value_fn(state))
+                acc = (1.0 - cfg.value_mix) * acc + cfg.value_mix * v0
+        return acc
+
+    def value(self, state: Pytree) -> jax.Array:
+        if self.env.value_fn is None:
+            return jnp.float32(0.0)
+        return self.env.value_fn(state)
+
+    def has_value(self) -> bool:
+        return self.env.value_fn is not None
+
+
+# ---------------------------------------------------------------------------
+# ModelEvaluator — one batched policy/value LM forward per master tick.
+# ---------------------------------------------------------------------------
+
+
+class ModelEvaluator(Evaluator):
+    """LM-backed evaluation over :mod:`repro.envs.token_env` state batches.
+
+    The token environment's per-slot ``step`` runs one forward for the
+    rollout policy plus two inside the transition (policy top-K + reward
+    log-prob).  This evaluator instead runs **one** forward over the whole
+    in-flight slot batch per tick and derives all three quantities from the
+    same logits: the top-K table (action decoding), the sampled simulation
+    action, and the reward log-prob (when the reward model is the policy
+    model; a distinct reward model adds exactly one more forward).
+
+    Paired with ``engine='async'`` searchers, whose master tick advances all
+    ``[W]`` (or flat ``[B·W]``) slots at once, this yields exactly one model
+    forward per master tick — asserted by ``tests/test_facade.py`` with a
+    traced call counter, and measured by ``benchmarks/bench_model_eval.py``.
+
+    Transitions apply :func:`repro.envs.token_env.apply_token` — the same
+    transition core the env's ``step`` uses — so a search with this
+    evaluator explores the same MDP by construction.
+    """
+
+    def __init__(
+        self,
+        model_cfg,
+        params,
+        *,
+        top_k: int,
+        eos_token: int = 0,
+        reward_cfg=None,
+        reward_params=None,
+        forward_fn: Optional[Callable] = None,
+        value_fn: Optional[Callable] = None,
+    ):
+        if forward_fn is None:
+            from ..models import forward as forward_fn  # circular-safe
+        self.model_cfg = model_cfg
+        self.params = params
+        self.top_k = top_k
+        self.eos_token = eos_token
+        self.reward_cfg = reward_cfg if reward_cfg is not None else model_cfg
+        self.reward_params = reward_params
+        self.forward_fn = forward_fn
+        self.value_fn = value_fn
+
+    def _position_logits(self, params, cfg, tokens, lengths) -> jax.Array:
+        """Logits at each slot's current position — ONE forward for [N]."""
+        logits, _ = self.forward_fn(params, cfg, {"tokens": tokens})
+        pos = jnp.maximum(lengths - 1, 0)
+        return jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
+        n = state.length.shape[0]
+        idx = jnp.arange(n)
+
+        # --- the one batched forward of this master tick -------------------
+        pol = self._position_logits(
+            self.params, self.model_cfg, state.tokens, state.length
+        )
+        top_vals, top_idx = jax.lax.top_k(pol, self.top_k)
+        ranks = jax.vmap(jax.random.categorical)(keys, top_vals)
+        a = jnp.where(kind == EXPAND, act, ranks).astype(jnp.int32)
+        token = top_idx[idx, jnp.clip(a, 0, self.top_k - 1)]
+
+        if self.reward_params is None:
+            rew_logits = pol
+        else:
+            rew_logits = self._position_logits(
+                self.reward_params, self.reward_cfg, state.tokens, state.length
+            )
+        logp = jax.nn.log_softmax(rew_logits.astype(jnp.float32))[idx, token]
+
+        # The env's own transition core, applied to the whole slot batch —
+        # the evaluator explores the same MDP by construction.  Deferred
+        # import: token_env pulls in the models stack, which a model-free
+        # `import repro.core` must not pay for.
+        from ..envs.token_env import apply_token
+
+        nxt, r, done = apply_token(state, token, logp, self.eos_token)
+        return slot_accounting(
+            cfg.gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
+            steps,
+        )
+
+    def value(self, state: Pytree) -> jax.Array:
+        if self.value_fn is None:
+            return jnp.float32(0.0)
+        return self.value_fn(state)
+
+    def has_value(self) -> bool:
+        return self.value_fn is not None

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 from ..envs.base import Environment
 from . import tree as tree_lib
-from .policies import PolicyConfig, child_scores, expansion_action
+from .evaluators import Evaluator, RolloutEvaluator
+from .policies import PolicyConfig, expansion_action
 from .tree import Tree
 
 Pytree = Any
@@ -66,38 +67,28 @@ class SearchResult(NamedTuple):
 
 
 def traverse(
-    tree: Tree, rng: jax.Array, cfg: SearchConfig
+    tree: Tree, rng: jax.Array, cfg: SearchConfig, use_kernel: bool = True
 ) -> jax.Array:
-    """Walk the tree from the root by the configured tree policy."""
-    width = min(cfg.max_width, tree.num_actions)
+    """Walk the tree from the root by the configured tree policy.
 
-    def cond(carry):
-        _, _, stop = carry
-        return jnp.logical_not(stop)
+    A ``B=1`` view over the batched lockstep traversal
+    (:func:`repro.core.batched_search.traverse_batched`), so single-tree and
+    multi-root engines score selections through the same fused Pallas
+    ``tree_select`` path — one selection implementation, kernel included.
+    Per-level RNG splits match the old per-node ``while_loop`` exactly, so
+    the walk is bit-identical to the scalar implementation it replaced.
+    """
+    # Local imports: batched_search/batched_tree import this module at load.
+    from .batched_search import _canonical_keys, traverse_batched
+    from .batched_tree import BatchedTree
 
-    def body(carry):
-        node, rng, _ = carry
-        rng, k_coin = jax.random.split(rng)
-        kids = tree.children[node]
-        n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
-        is_leaf = n_tried == 0
-        at_depth = tree.depth[node] >= cfg.max_depth
-        is_term = tree.terminal[node]
-        not_full = n_tried < width
-        coin = jax.random.uniform(k_coin) < cfg.expand_coin
-        stop = is_leaf | at_depth | is_term | (not_full & coin)
-
-        scores = child_scores(tree, node, cfg.policy)
-        best = jnp.argmax(scores)
-        any_valid = scores[best] > -jnp.inf
-        stop = stop | jnp.logical_not(any_valid)
-        nxt = jnp.where(stop, node, tree.children[node, best])
-        return nxt.astype(jnp.int32), rng, stop
-
-    node, _, _ = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), rng, jnp.bool_(False))
+    lifted = BatchedTree(*(jax.tree.map(lambda x: x[None], f) for f in tree))
+    # Canonicalize typed PRNG keys to raw key data before adding the batch
+    # axis — the batched walk's masked key-freeze broadcasts against [B, 2].
+    nodes = traverse_batched(
+        lifted, _canonical_keys(rng)[None], cfg, use_kernel=use_kernel
     )
-    return node
+    return nodes[0]
 
 
 # ---------------------------------------------------------------------------
@@ -112,38 +103,14 @@ def rollout_return(
     already_done: jax.Array,
     rng: jax.Array,
 ) -> jax.Array:
-    """Discounted simulation return with optional value bootstrap/mixing."""
+    """Discounted simulation return under the default rollout evaluation.
 
-    def cond(carry):
-        _, done, _, _, _, steps = carry
-        return jnp.logical_not(done) & (steps < cfg.max_sim_steps)
-
-    def body(carry):
-        state, done, acc, disc, rng, steps = carry
-        rng, k = jax.random.split(rng)
-        a = env.policy(k, state)
-        nxt, r, d = env.step(state, a)
-        acc = acc + disc * r
-        disc = disc * cfg.gamma
-        return nxt, done | d, acc, disc, rng, steps + 1
-
-    init = (
-        state,
-        jnp.asarray(already_done, jnp.bool_),
-        jnp.float32(0.0),
-        jnp.float32(1.0),
-        rng,
-        jnp.int32(0),
-    )
-    final_state, done, acc, disc, _, _ = jax.lax.while_loop(cond, body, init)
-
-    if env.value_fn is not None:
-        # Truncation bootstrap: R_simu = Σ γ^i r_i + γ^T V(s_T)  (App. D).
-        acc = acc + disc * jnp.where(done, 0.0, env.value_fn(final_state))
-        if cfg.value_mix > 0.0:
-            v0 = jnp.where(already_done, 0.0, env.value_fn(state))
-            acc = (1.0 - cfg.value_mix) * acc + cfg.value_mix * v0
-    return acc
+    The implementation lives in
+    :meth:`repro.core.evaluators.RolloutEvaluator.rollout`; this wrapper
+    remains for callers that want the classic ``env.policy`` rollout without
+    constructing an evaluator.
+    """
+    return RolloutEvaluator(env).rollout(cfg, state, already_done, rng)
 
 
 # ---------------------------------------------------------------------------
@@ -182,7 +149,7 @@ def _settle(
 
 
 def _phase1_select(
-    tree: Tree, rng: jax.Array, cfg: SearchConfig
+    tree: Tree, rng: jax.Array, cfg: SearchConfig, use_kernel: bool = True
 ) -> tuple[Tree, _Slots, jax.Array]:
     """Sequentially select `wave_size` slots, applying in-flight statistics
     between selections (the heart of WU-UCT)."""
@@ -192,7 +159,7 @@ def _phase1_select(
     def slot_body(j, carry):
         tree, rng, slots = carry
         rng, k_t, k_e = jax.random.split(rng, 3)
-        node = traverse(tree, k_t, cfg)
+        node = traverse(tree, k_t, cfg, use_kernel)
 
         kids = tree.children[node]
         n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
@@ -264,14 +231,17 @@ def _phase2_work(
     slots: _Slots,
     rng: jax.Array,
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    evaluator: Optional[Evaluator] = None,
 ):
     """The parallel part: expansion env-step + simulation rollout per slot.
 
     This is the only compute that touches the environment/policy network; on
     a pod it shards over the ``data`` axis (``constrain`` installs the
-    sharding constraint for the GSPMD partitioner).
+    sharding constraint for the GSPMD partitioner).  ``evaluator`` owns the
+    simulation (default: the classic env rollout).
     """
     W = cfg.wave_size
+    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
     keys = jax.random.split(rng, W)
 
     def one_slot(kind, stop_node, sim_node, act, key):
@@ -284,7 +254,7 @@ def _phase2_work(
             tree_lib.get_state(tree, sim_node),
         )
         start_done = jnp.where(is_exp, done_child, tree.terminal[sim_node])
-        ret = rollout_return(env, cfg, start_state, start_done, key)
+        ret = evaluator.rollout(cfg, start_state, start_done, key)
         return child_state, r_edge, done_child, ret
 
     args = (slots.kind, slots.stop_node, slots.sim_node, slots.act, keys)
@@ -334,6 +304,8 @@ def run_search(
     root_state: Pytree,
     rng: jax.Array,
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    evaluator: Optional[Evaluator] = None,
+    use_kernel: bool = True,
 ) -> SearchResult:
     """Full search from ``root_state``; returns the move decision + stats."""
     if cfg.num_simulations % cfg.wave_size != 0:
@@ -345,10 +317,10 @@ def run_search(
     def wave_body(i, carry):
         tree, rng, dup_acc, max_o = carry
         rng, k_sel, k_sim = jax.random.split(rng, 3)
-        tree, slots, dups = _phase1_select(tree, k_sel, cfg)
+        tree, slots, dups = _phase1_select(tree, k_sel, cfg, use_kernel)
         max_o = jnp.maximum(max_o, tree.O[0])
         child_states, r_edge, done_child, rets = _phase2_work(
-            env, cfg, tree, slots, k_sim, constrain
+            env, cfg, tree, slots, k_sim, constrain, evaluator
         )
         tree = _phase3_settle(tree, cfg, slots, child_states, r_edge, done_child, rets)
         return tree, rng, dup_acc + dups, max_o
@@ -375,9 +347,14 @@ def make_searcher(
     cfg: SearchConfig,
     constrain: Optional[Callable[[Pytree], Pytree]] = None,
     jit: bool = True,
+    evaluator: Optional[Evaluator] = None,
+    use_kernel: bool = True,
 ):
     """Build ``search(root_state, rng) -> SearchResult`` for this env/config."""
-    fn = functools.partial(run_search, env, cfg, constrain=constrain)
+    fn = functools.partial(
+        run_search, env, cfg, constrain=constrain, evaluator=evaluator,
+        use_kernel=use_kernel,
+    )
     return jax.jit(fn) if jit else fn
 
 

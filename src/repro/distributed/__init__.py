@@ -1,4 +1,5 @@
 from .sharding import (
+    abstract_mesh,
     batch_spec,
     constrain,
     constrain_search_batch,
@@ -6,9 +7,11 @@ from .sharding import (
     logical_spec,
     opt_state_shardings,
     param_shardings,
+    use_mesh,
 )
 
 __all__ = [
+    "abstract_mesh",
     "batch_spec",
     "constrain",
     "constrain_search_batch",
@@ -16,4 +19,5 @@ __all__ = [
     "logical_spec",
     "opt_state_shardings",
     "param_shardings",
+    "use_mesh",
 ]

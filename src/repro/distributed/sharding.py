@@ -70,6 +70,33 @@ def ambient_abstract_mesh():
     return get() if get is not None else None
 
 
+def abstract_mesh(axis_sizes, axis_names):
+    """Version-portable ``jax.sharding.AbstractMesh`` constructor.
+
+    Newer JAX takes ``(axis_sizes, axis_names, axis_types=...)``; pre-0.5
+    releases (no ``AxisType``) take a single ``((name, size), ...)`` tuple.
+    Spec logic downstream only reads ``.shape`` / ``.axis_names``, which both
+    forms provide.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    return jax.sharding.AbstractMesh(
+        tuple(axis_sizes), tuple(axis_names),
+        axis_types=(axis_type.Auto,) * len(axis_names),
+    )
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` where it exists; on older JAX the ``Mesh`` object itself
+    is the context manager.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def constrain(x: jax.Array, *axes) -> jax.Array:
     """with_sharding_constraint against the ambient abstract mesh (no-op
     outside a mesh context, so model code stays mesh-agnostic)."""

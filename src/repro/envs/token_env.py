@@ -33,6 +33,32 @@ class TokenEnvState(NamedTuple):
     done: jax.Array     # bool[]
 
 
+def apply_token(
+    state: TokenEnvState, token: jax.Array, logp: jax.Array, eos_token: int
+) -> tuple[TokenEnvState, jax.Array, jax.Array]:
+    """Transition core shared by ``step`` and the batched ``ModelEvaluator``:
+    append ``token`` at the current position, reward its ``logp``, terminate
+    at EOS or max length, freeze finished sequences.
+
+    Shape-polymorphic: accepts the scalar per-slot state or states with any
+    leading batch axes — keeping the evaluator's batched MDP equivalent to
+    the env's by construction.
+    """
+    max_len = state.tokens.shape[-1]
+    token = jnp.asarray(token, jnp.int32)
+    at_pos = jnp.arange(max_len) == state.length[..., None]
+    new_tokens = jnp.where(at_pos, token[..., None], state.tokens)
+    new_len = state.length + 1
+    hit_end = (token == eos_token) | (new_len >= max_len)
+    nxt = TokenEnvState(
+        tokens=jnp.where(state.done[..., None], state.tokens, new_tokens),
+        length=jnp.where(state.done, state.length, new_len),
+        done=state.done | hit_end,
+    )
+    reward = jnp.where(state.done, 0.0, logp)
+    return nxt, reward, nxt.done
+
+
 def make_token_env(
     policy_cfg: ModelConfig,
     policy_params,
@@ -67,16 +93,7 @@ def make_token_env(
         rew_logits = _logits(reward_params, reward_cfg, state.tokens, state.length)
         logp = jax.nn.log_softmax(rew_logits.astype(jnp.float32))[token]
 
-        new_tokens = state.tokens.at[state.length].set(token)
-        new_len = state.length + 1
-        done = (token == eos_token) | (new_len >= max_len)
-        nxt = TokenEnvState(
-            tokens=jnp.where(state.done, state.tokens, new_tokens),
-            length=jnp.where(state.done, state.length, new_len),
-            done=state.done | done,
-        )
-        reward = jnp.where(state.done, 0.0, logp)
-        return nxt, reward, nxt.done
+        return apply_token(state, token, logp, eos_token)
 
     def rollout_policy(key: jax.Array, state: TokenEnvState) -> jax.Array:
         # Sample an action rank ∝ the policy's top-K probabilities.

@@ -1,6 +1,9 @@
 """Search launcher: WU-UCT (or any baseline) on any registered environment.
 
-Usage:
+Everything goes through the one front door, ``repro.core.build_searcher``:
+the ``--algo/--engine/--batch`` flags map 1:1 onto ``SearchSpec`` fields.
+
+Episode play (one search per move):
   PYTHONPATH=src python -m repro.launch.search --env tap --algo wu_uct \
       --workers 16 --simulations 128 --episodes 2
 
@@ -25,14 +28,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core import (
-    make_algorithm,
-    make_async_searcher,
-    make_batched_async_searcher,
-    make_batched_searcher,
-    make_config,
-    play_episode,
-)
+from repro.core import SearchSpec, build_searcher, play_episode
 from repro.distributed import constrain_search_batch
 from repro.envs import make_bandit_tree, make_random_mdp, make_tap_game
 
@@ -69,10 +65,12 @@ def main() -> None:
     args = ap.parse_args()
 
     env = make_env(args.env)
-    cfg = make_config(
-        args.algo,
+    spec = SearchSpec(
+        algo=args.algo,
+        engine=args.engine,
+        batch=args.batch,
         num_simulations=args.simulations,
-        wave_size=1 if args.algo == "uct" else args.workers,
+        wave_size=args.workers,
         max_depth=args.max_depth,
         max_sim_steps=20,
         max_width=min(args.width, env.num_actions),
@@ -80,14 +78,10 @@ def main() -> None:
     )
 
     if args.batch > 0:
-        if args.algo in ("leafp", "rootp"):
-            raise SystemExit(f"--batch supports wave-engine algos, not {args.algo}")
         B = args.batch
-        make = (make_batched_async_searcher if args.engine == "async"
-                else make_batched_searcher)
-        # No-op without a mesh; under one, shards the B (and async [B·W])
-        # axis over ('pod', 'data').
-        search = make(env, cfg, constrain=constrain_search_batch)
+        # constrain is a no-op without a mesh; under one, shards the B (and
+        # async [B·W]) axis over ('pod', 'data').
+        search = build_searcher(env, spec, constrain=constrain_search_batch)
         roots = jax.vmap(env.init)(
             jax.random.split(jax.random.PRNGKey(args.seed), B)
         )
@@ -97,6 +91,7 @@ def main() -> None:
         res = jax.block_until_ready(search(roots, rngs))
         dt = time.time() - t0
         acts = np.asarray(res.action)
+        cfg = spec.config
         print(f"{args.algo}[{args.engine}] B={B} W={cfg.wave_size} "
               f"T={cfg.num_simulations}: "
               f"{B / dt:.1f} searches/s  wall={dt:.2f}s  "
@@ -104,18 +99,12 @@ def main() -> None:
               f"{'…' if B > 16 else ''}  overflowed={bool(res.overflowed.any())}")
         return
 
-    if args.engine == "async":
-        if args.algo in ("leafp", "rootp"):
-            raise SystemExit(f"--engine async supports wave-engine algos, "
-                             f"not {args.algo}")
-        searcher = make_async_searcher(env, cfg)
-    else:
-        searcher = make_algorithm(args.algo, env, cfg)
+    searcher = build_searcher(env, spec)
     rets, steps = [], []
     for ep in range(args.episodes):
         t0 = time.time()
         ret, moves, done = play_episode(
-            env, cfg, jax.random.PRNGKey(args.seed + ep), max_moves=32,
+            env, spec.config, jax.random.PRNGKey(args.seed + ep), max_moves=32,
             searcher=searcher,
         )
         rets.append(ret)

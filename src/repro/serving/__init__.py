@@ -1,3 +1,4 @@
 from .engine import ServeConfig, ServingEngine
+from .search_service import SearchService
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["SearchService", "ServeConfig", "ServingEngine"]

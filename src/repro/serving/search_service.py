@@ -1,0 +1,120 @@
+"""Token-search service: many users' search requests, one batched program.
+
+The serving-side consumer of the search front door: a batch of prompt
+requests becomes ``B`` root states of one multi-root search
+(``repro.core.build_searcher`` with ``spec.batch = B``), so every master
+tick of the engine advances all users' searches together — and, with the
+default :class:`~repro.core.evaluators.ModelEvaluator`, evaluates all their
+in-flight rollout slots in **one** policy-LM forward (the flat ``[B·W]``
+batch).  This is the WU-UCT analogue of continuous batching in
+:mod:`repro.serving.engine`: throughput comes from batching across requests,
+not from parallelizing one request harder.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core import SearchSpec, build_searcher
+from ..core.evaluators import Evaluator, ModelEvaluator
+from ..envs.token_env import TokenEnvState, make_token_env
+from ..models import forward
+from ..models.config import ModelConfig
+
+
+class SearchService:
+    """Batched WU-UCT token search behind a prompt-in / token-out interface.
+
+    ``spec.batch`` fixes the request-slot count (one compiled program);
+    shorter request lists are padded with repeats and the padding results
+    dropped.  ``evaluator=None`` builds a :class:`ModelEvaluator` over the
+    policy/reward models — pass an explicit evaluator (e.g. a
+    ``RolloutEvaluator`` over the token env) to switch evaluation modes
+    without touching the engine.
+    """
+
+    def __init__(
+        self,
+        model_cfg: ModelConfig,
+        params,
+        spec: SearchSpec,
+        *,
+        top_k: int = 8,
+        max_len: int = 64,
+        eos_token: int = 0,
+        reward_cfg: Optional[ModelConfig] = None,
+        reward_params=None,
+        evaluator: Optional[Evaluator] = None,
+    ):
+        if spec.batch <= 0:
+            raise ValueError("SearchService needs a batched spec (batch > 0)")
+        self.cfg = model_cfg
+        self.params = params
+        self.spec = spec
+        self.top_k = top_k
+        self.max_len = max_len
+        # The env's prompt only seeds env.init, which the service bypasses
+        # (roots are built from the request prompts directly).
+        env = make_token_env(
+            model_cfg, params, jnp.zeros((1,), jnp.int32), max_len=max_len,
+            top_k=top_k, eos_token=eos_token,
+            reward_cfg=reward_cfg, reward_params=reward_params,
+        )
+        if evaluator is None:
+            evaluator = ModelEvaluator(
+                model_cfg, params, top_k=top_k, eos_token=eos_token,
+                reward_cfg=reward_cfg, reward_params=reward_params,
+            )
+        self.env = env
+        self.evaluator = evaluator
+        self._search = build_searcher(env, spec, evaluator=evaluator)
+
+    def _roots(self, prompts: Sequence[Sequence[int]]) -> TokenEnvState:
+        B = self.spec.batch
+        if not prompts:
+            raise ValueError("need at least one prompt")
+        if len(prompts) > B:
+            raise ValueError(f"got {len(prompts)} prompts for batch={B}")
+        too_long = [i for i, p in enumerate(prompts) if len(p) >= self.max_len]
+        if too_long:
+            raise ValueError(
+                f"prompts {too_long} have length >= max_len={self.max_len}; "
+                "leave room for at least one generated token"
+            )
+        padded = list(prompts) + [prompts[0]] * (B - len(prompts))
+        tokens = jnp.zeros((B, self.max_len), jnp.int32)
+        lengths = []
+        for i, p in enumerate(padded):
+            tokens = tokens.at[i, : len(p)].set(jnp.asarray(p, jnp.int32))
+            lengths.append(len(p))
+        return TokenEnvState(
+            tokens=tokens,
+            length=jnp.asarray(lengths, jnp.int32),
+            done=jnp.zeros((B,), jnp.bool_),
+        )
+
+    def search(self, prompts: Sequence[Sequence[int]], key: jax.Array):
+        """Run one batched search; returns the ``SearchResult`` (leading
+        ``[B]``; rows past ``len(prompts)`` are padding)."""
+        roots = self._roots(prompts)
+        return self._search(roots, jax.random.split(key, self.spec.batch))
+
+    def decide(self, prompts: Sequence[Sequence[int]], key: jax.Array):
+        """Search + decode: the searched next token for every prompt.
+
+        Actions are ranks into the policy's top-K at each prompt's current
+        position; one batched forward maps them back to vocabulary ids.
+        """
+        n = len(prompts)
+        roots = self._roots(prompts)
+        res = self._search(roots, jax.random.split(key, self.spec.batch))
+        logits, _ = forward(self.params, self.cfg, {"tokens": roots.tokens})
+        pos = jnp.maximum(roots.length - 1, 0)
+        at_pos = jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
+        _, top_idx = jax.lax.top_k(at_pos, self.top_k)
+        ranks = jnp.clip(res.action, 0, self.top_k - 1)
+        tokens = jnp.take_along_axis(top_idx, ranks[:, None], axis=1)[:, 0]
+        return [int(t) for t in tokens[:n]], res

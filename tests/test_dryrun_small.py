@@ -26,6 +26,7 @@ import numpy as np
 
 from repro.launch.cells import build_cell
 from repro.launch.mesh import make_test_mesh
+from repro.distributed.sharding import use_mesh
 
 results = {}
 
@@ -39,7 +40,7 @@ cells = [
 ]
 for arch, shape in cells:
     cell = build_cell(arch, shape, mesh)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(
             cell.fn, in_shardings=cell.in_shardings,
             out_shardings=cell.out_shardings,
@@ -49,7 +50,7 @@ for arch, shape in cells:
 # --- multi-pod mesh ------------------------------------------------------
 mesh3 = make_test_mesh(multi_pod=True)
 cell = build_cell("llama3-8b", "train_4k", mesh3)
-with jax.set_mesh(mesh3):
+with use_mesh(mesh3):
     jax.jit(
         cell.fn, in_shardings=cell.in_shardings, out_shardings=cell.out_shardings
     ).lower(*cell.arg_specs).compile()
@@ -58,12 +59,12 @@ results["llama3-8b/train_4k/multi_pod"] = "ok"
 # --- optimized strategies compile too -------------------------------------
 cell = build_cell("llama3-8b", "train_4k", mesh, strategy="fsdp",
                   cfg_overrides={"loss_chunk": 512})
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jax.jit(cell.fn, in_shardings=cell.in_shardings,
             out_shardings=cell.out_shardings).lower(*cell.arg_specs).compile()
 results["llama3-8b/train_4k/fsdp"] = "ok"
 cell = build_cell("llama3-8b", "decode_32k", mesh, kv_mode="batch+seq_model")
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jax.jit(cell.fn, in_shardings=cell.in_shardings,
             out_shardings=cell.out_shardings).lower(*cell.arg_specs).compile()
 results["llama3-8b/decode_32k/splitkv"] = "ok"
@@ -72,7 +73,7 @@ results["llama3-8b/decode_32k/splitkv"] = "ok"
 from repro.launch.search_cell import build_search_cell
 
 scell = build_search_cell(mesh, wave_size=8, num_simulations=32, d_mlp=256)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     jax.jit(
         scell.fn, in_shardings=scell.in_shardings,
         out_shardings=scell.out_shardings,
@@ -94,7 +95,7 @@ x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model), jnp.float32)
 
 out_local, aux_local = jax.jit(lambda p, x: moe_block(p, cfg, x))(bp, x)
 mesh2 = make_test_mesh()  # data=2, model=4 : 8 experts -> 2 per shard
-with jax.set_mesh(mesh2):
+with use_mesh(mesh2):
     out_shard, aux_shard = jax.jit(lambda p, x: moe_block(p, cfg, x))(bp, x)
 err = float(jnp.max(jnp.abs(out_local - out_shard)))
 results["moe_sharded_vs_local_err"] = err

@@ -1,0 +1,355 @@
+"""The search front door (core/api.py): golden equivalence + evaluators.
+
+Three claim families:
+
+* ``build_searcher(env, spec)`` reproduces the direct engine entry points
+  *bit-exactly* for every ``(engine, batch, algo)`` cell — the facade is
+  pure dispatch, never a different search;
+* the deprecated shims in ``repro.core`` still work and warn;
+* ``ModelEvaluator`` issues exactly ONE batched model forward per master
+  tick on the async engines (counted with a traced callback), while
+  reproducing the token environment's transition semantics.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import ModelEvaluator, RolloutEvaluator, SearchSpec, build_searcher
+from repro.core.api import as_search_config, make_config
+from repro.core.async_search import run_async_search
+from repro.core.baselines import make_algorithm, run_leafp, run_rootp
+from repro.core.batched_async_search import run_async_search_batched
+from repro.core.batched_search import run_search_batched
+from repro.core.wu_uct import run_search
+from repro.envs import make_bandit_tree
+
+
+@pytest.fixture(scope="module")
+def env():
+    return make_bandit_tree(depth=4, num_actions=3, seed=0)
+
+
+def _spec(**kw) -> SearchSpec:
+    base = dict(
+        num_simulations=16, wave_size=4, max_depth=5, max_sim_steps=5,
+        max_width=3, gamma=0.99,
+    )
+    base.update(kw)
+    return SearchSpec(**base)
+
+
+def _assert_results_equal(a, b, msg=""):
+    assert type(a) is type(b)
+    for f in a._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}: field {f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Golden bit-equivalence: facade vs direct engine call, per cell.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "algo", ["wu_uct", "uct", "treep", "treep_vc", "leafp", "rootp"]
+)
+def test_facade_matches_wave_single(env, algo):
+    spec = _spec(algo=algo)
+    cfg = as_search_config(spec)
+    key = jax.random.PRNGKey(3)
+    root = env.init(key)
+    res = build_searcher(env, spec)(root, key)
+    direct = {
+        "leafp": lambda: run_leafp(env, cfg, root, key),
+        "rootp": lambda: run_rootp(env, cfg, root, key),
+    }.get(algo, lambda: run_search(env, cfg, root, key))
+    _assert_results_equal(res, jax.jit(direct)(), f"wave/{algo}")
+
+
+@pytest.mark.parametrize("algo", ["wu_uct", "uct"])
+def test_facade_matches_async_single(env, algo):
+    spec = _spec(algo=algo, engine="async")
+    cfg = as_search_config(spec)
+    key = jax.random.PRNGKey(4)
+    root = env.init(key)
+    res = build_searcher(env, spec)(root, key)
+    direct = jax.jit(lambda s, k: run_async_search(env, cfg, s, k))(root, key)
+    _assert_results_equal(res, direct, f"async/{algo}")
+
+
+@pytest.mark.parametrize("algo", ["wu_uct", "treep", "treep_vc"])
+def test_facade_matches_wave_batched(env, algo):
+    B = 3
+    spec = _spec(algo=algo, batch=B)
+    cfg = as_search_config(spec)
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), B))
+    rngs = jax.random.split(jax.random.PRNGKey(1), B)
+    res = build_searcher(env, spec)(roots, rngs)
+    direct = jax.jit(
+        lambda s, k: run_search_batched(env, cfg, s, k)
+    )(roots, rngs)
+    _assert_results_equal(res, direct, f"wave/batched/{algo}")
+    assert res.action.shape == (B,)
+
+
+def test_facade_matches_async_batched(env):
+    B = 3
+    spec = _spec(algo="wu_uct", engine="async", batch=B)
+    cfg = as_search_config(spec)
+    roots = jax.vmap(env.init)(jax.random.split(jax.random.PRNGKey(0), B))
+    rngs = jax.random.split(jax.random.PRNGKey(1), B)
+    res = build_searcher(env, spec)(roots, rngs)
+    direct = jax.jit(
+        lambda s, k: run_async_search_batched(env, cfg, s, k)
+    )(roots, rngs)
+    _assert_results_equal(res, direct, "async/batched")
+
+
+def test_facade_accepts_typed_prng_keys(env):
+    """New-style typed keys (jax.random.key) must work end to end — the
+    single-tree traverse canonicalizes them before the batched B=1 walk."""
+    spec = _spec(algo="wu_uct")
+    typed = jax.random.key(7)
+    root = env.init(typed)
+    res = build_searcher(env, spec)(root, typed)
+    raw = jax.random.PRNGKey(7)
+    res_raw = build_searcher(env, spec)(env.init(raw), raw)
+    _assert_results_equal(res, res_raw, "typed vs raw keys")
+
+
+def test_use_kernel_false_reachable_and_equal(env):
+    """spec.use_kernel=False must route single-tree selection through the
+    jnp reference scorer — and agree with the Pallas kernel path."""
+    for engine in ("wave", "async"):
+        spec = _spec(algo="wu_uct", engine=engine)
+        key = jax.random.PRNGKey(11)
+        root = env.init(key)
+        res_k = build_searcher(env, spec)(root, key)
+        res_r = build_searcher(env, spec._replace(use_kernel=False))(root, key)
+        _assert_results_equal(res_k, res_r, f"use_kernel {engine}")
+
+
+def test_explicit_rollout_evaluator_is_default(env):
+    spec = _spec(algo="wu_uct")
+    key = jax.random.PRNGKey(9)
+    root = env.init(key)
+    res_default = build_searcher(env, spec)(root, key)
+    res_explicit = build_searcher(
+        env, spec, evaluator=RolloutEvaluator(env)
+    )(root, key)
+    _assert_results_equal(res_default, res_explicit, "explicit evaluator")
+
+
+# ---------------------------------------------------------------------------
+# Spec surface: validation, lowering, legacy builders.
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation(env):
+    with pytest.raises(ValueError):
+        build_searcher(env, _spec(algo="leafp", engine="async"))
+    with pytest.raises(ValueError):
+        build_searcher(env, _spec(algo="rootp", batch=2))
+    with pytest.raises(ValueError):
+        as_search_config(_spec(algo="nope"))
+    with pytest.raises(ValueError):
+        as_search_config(_spec(engine="nope"))
+    with pytest.raises(ValueError):
+        build_searcher(env, _spec(batch=-1))
+
+
+def test_spec_lowering_modes():
+    assert as_search_config(_spec(algo="wu_uct")).stat_mode == "wu"
+    assert as_search_config(_spec(algo="treep")).stat_mode == "vl"
+    assert as_search_config(_spec(algo="treep_vc")).stat_mode == "wu"
+    cfg = as_search_config(_spec(algo="uct", wave_size=16))
+    assert cfg.wave_size == 1 and cfg.stat_mode == "none"
+    cfg = as_search_config(_spec(algo="treep", r_vl=0.25, beta=2.0))
+    assert cfg.policy.kind == "treep"
+    assert cfg.policy.r_vl == 0.25 and cfg.policy.beta == 2.0
+
+
+def test_make_config_reexpressed_over_spec():
+    kw = dict(num_simulations=32, wave_size=8, max_depth=6, max_sim_steps=6,
+              max_width=4, gamma=0.9)
+    for algo in ("wu_uct", "uct", "treep", "treep_vc", "leafp", "rootp"):
+        assert make_config(algo, **kw) == as_search_config(
+            SearchSpec(algo=algo, **kw)
+        )
+    # Legacy escape hatches still override.
+    from repro.core import PolicyConfig
+    cfg = make_config("wu_uct", policy=PolicyConfig(kind="uct"),
+                      stat_mode="none", **kw)
+    assert cfg.policy.kind == "uct" and cfg.stat_mode == "none"
+
+
+def test_deprecated_shims_warn_and_work(env):
+    spec = _spec(algo="wu_uct")
+    cfg = as_search_config(spec)
+    key = jax.random.PRNGKey(5)
+    root = env.init(key)
+    golden = build_searcher(env, spec)(root, key)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        res = core.run_search(env, cfg, root, key)
+        searcher = core.make_searcher(env, cfg)
+    assert sum(
+        issubclass(w.category, DeprecationWarning) for w in rec
+    ) >= 2
+    _assert_results_equal(res, golden, "deprecated run_search")
+    _assert_results_equal(searcher(root, key), golden, "deprecated make_searcher")
+
+
+def test_make_algorithm_still_dispatches(env):
+    # make_algorithm is the legacy multi-algo dispatcher; it must agree with
+    # the facade on a baseline algo.
+    spec = _spec(algo="leafp")
+    cfg = as_search_config(spec)
+    key = jax.random.PRNGKey(6)
+    root = env.init(key)
+    golden = build_searcher(env, spec)(root, key)
+    res = make_algorithm("leafp", env, cfg)(root, key)
+    _assert_results_equal(res, golden, "make_algorithm leafp")
+
+
+# ---------------------------------------------------------------------------
+# ModelEvaluator: one batched LM forward per master tick.
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm(vocab=64):
+    from repro.configs import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(
+        get_reduced("llama3-8b"), vocab_size=vocab, num_layers=1,
+        d_model=32, num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+    )
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _counting_forward(calls):
+    from repro.models import forward
+
+    def fn(params, cfg, batch):
+        jax.debug.callback(lambda: calls.append(1))
+        return forward(params, cfg, batch)
+
+    return fn
+
+
+def test_model_evaluator_one_forward_per_tick():
+    from repro.envs.token_env import make_token_env
+
+    cfg, params = _tiny_lm()
+    prompt = jnp.asarray([3, 5, 7], jnp.int32)
+    env = make_token_env(cfg, params, prompt, max_len=12, top_k=4, eos_token=1)
+    calls = []
+    ev = ModelEvaluator(
+        cfg, params, top_k=4, eos_token=1, forward_fn=_counting_forward(calls)
+    )
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", num_simulations=12, wave_size=4,
+        max_depth=5, max_sim_steps=5, max_width=4, gamma=1.0,
+    )
+    search = build_searcher(env, spec, evaluator=ev)
+    key = jax.random.PRNGKey(0)
+    res = jax.block_until_ready(search(env.init(key), key))
+    jax.effects_barrier()
+    assert len(calls) == int(res.ticks), (len(calls), int(res.ticks))
+    assert int(res.tree_size) > 1  # the search actually grew a tree
+
+
+def test_model_evaluator_one_forward_per_tick_batched():
+    from repro.envs.token_env import make_token_env
+
+    cfg, params = _tiny_lm()
+    prompt = jnp.asarray([3, 5, 7], jnp.int32)
+    env = make_token_env(cfg, params, prompt, max_len=12, top_k=4, eos_token=1)
+    calls = []
+    ev = ModelEvaluator(
+        cfg, params, top_k=4, eos_token=1, forward_fn=_counting_forward(calls)
+    )
+    B = 3
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", batch=B, num_simulations=12,
+        wave_size=4, max_depth=5, max_sim_steps=5, max_width=4, gamma=1.0,
+    )
+    search = build_searcher(env, spec, evaluator=ev)
+    key = jax.random.PRNGKey(0)
+    roots = jax.vmap(env.init)(jax.random.split(key, B))
+    res = jax.block_until_ready(search(roots, jax.random.split(key, B)))
+    jax.effects_barrier()
+    # The master loop runs until the slowest tree finishes; every iteration
+    # is exactly one [B·W] forward.
+    assert len(calls) == int(np.asarray(res.ticks).max()), (
+        len(calls), np.asarray(res.ticks),
+    )
+
+
+def test_model_evaluator_matches_token_env_transitions():
+    """ModelEvaluator's batched transition == token_env.step per slot."""
+    from repro.core.evaluators import SIM
+    from repro.envs.token_env import make_token_env
+
+    cfg, params = _tiny_lm()
+    prompt = jnp.asarray([3, 5], jnp.int32)
+    env = make_token_env(cfg, params, prompt, max_len=8, top_k=4, eos_token=1)
+    ev = ModelEvaluator(cfg, params, top_k=4, eos_token=1)
+
+    s0 = env.init(jax.random.PRNGKey(0))
+    n = 3
+    state = jax.tree.map(lambda x: jnp.stack([x] * n), s0)
+    kind = jnp.full((n,), SIM, jnp.int32)
+    act = jnp.arange(n, dtype=jnp.int32)  # ignored for SIM slots
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
+    scfg = SearchSpec(gamma=1.0, max_sim_steps=4).config
+
+    new_state, r, done, acc, disc, steps, rdone = ev.tick(
+        scfg, kind, act, state,
+        jnp.zeros((n,), jnp.bool_), jnp.zeros((n,), jnp.float32),
+        jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.int32), keys,
+    )
+    # Per slot: the sampled action, stepped through the *env*, must produce
+    # the same state/reward the evaluator computed in one batched forward.
+    for i in range(n):
+        tok_i = new_state.tokens[i, s0.length]
+        pol = ev._position_logits(
+            params, cfg, state.tokens[i][None], state.length[i][None]
+        )[0]
+        _, top_idx = jax.lax.top_k(pol, 4)
+        assert int(tok_i) in [int(t) for t in top_idx]
+        # Reward equals the env's reward for that token's rank.
+        rank = int(jnp.argmax(top_idx == tok_i))
+        _, r_env, d_env = jax.jit(env.step)(
+            jax.tree.map(lambda x: x[i], state), jnp.int32(rank)
+        )
+        np.testing.assert_allclose(float(r[i]), float(r_env), rtol=1e-5)
+        assert bool(done[i]) == bool(d_env)
+        assert int(steps[i]) == 1
+
+
+def test_search_service_batched_decide():
+    from repro.serving import SearchService
+
+    cfg, params = _tiny_lm()
+    service = SearchService(
+        cfg, params,
+        SearchSpec(algo="wu_uct", engine="async", batch=3, num_simulations=8,
+                   wave_size=2, max_depth=4, max_sim_steps=4, max_width=4,
+                   gamma=1.0),
+        top_k=4, max_len=12, eos_token=1,
+    )
+    prompts = [[3, 5, 7], [2, 9]]
+    tokens, res = service.decide(prompts, jax.random.PRNGKey(0))
+    assert len(tokens) == 2
+    assert all(0 <= t < cfg.vocab_size for t in tokens)
+    assert res.action.shape == (3,)  # padded to spec.batch
