@@ -1,33 +1,49 @@
-"""Model-backed evaluation throughput: one LM forward per master tick.
+"""Model-backed evaluation throughput: decode-cached vs prefill-per-tick.
 
-The claim under test (the ROADMAP follow-up made real by
-``core/evaluators.py``): with a :class:`~repro.core.evaluators.ModelEvaluator`
-plugged into the async engines through ``build_searcher``, every master tick
-evaluates ALL ``[B·W]`` in-flight rollout slots with **one** batched
-policy-LM forward — versus the default rollout evaluation over the token
-env, whose per-slot ``env.policy`` + ``env.step`` lower to three forwards
-per slot step.
+Two claims under test:
 
-Rows: ``model_eval_B{n}`` / ``rollout_eval_B{n}`` with derived searches/sec,
-plus a speedup row.  Exact forward-per-tick counting is asserted in
-``tests/test_facade.py``; this file measures the wall-clock consequence.
+* ``ModelEvaluator`` (PR 4): every async master tick evaluates ALL ``[B·W]``
+  in-flight slots with **one** batched full-prefix forward — vs the default
+  rollout evaluation whose per-slot ``env.policy`` + ``env.step`` lower to
+  three forwards per slot step.
+* ``CachedModelEvaluator`` (this PR): that one forward becomes a single
+  batched ``decode_step`` against per-slot KV caches carried in the slot
+  state — O(1) in prefix length instead of O(depth).  The ``--depth`` sweep
+  makes the asymptotics visible: prefill-per-tick cost grows with
+  ``max_depth`` (longer prefixes per forward) while the cached per-tick cost
+  stays flat, so the speedup widens with depth.
+
+Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` with derived
+searches/sec and per-tick µs, ``cached_speedup_d{d}_B{n}``, plus the PR-4
+``rollout_eval`` baseline at the first depth.  Forward/decode counting is
+asserted in ``tests/test_facade.py`` / ``tests/test_cached_evaluator.py``;
+this file measures the wall-clock consequence.  ``benchmarks/run.py`` dumps
+the same measurements machine-readably to ``BENCH_model_eval.json``.
 """
 
 from __future__ import annotations
 
+import argparse
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced
-from repro.core import ModelEvaluator, SearchSpec, build_searcher
+from repro.core import (
+    CachedModelEvaluator,
+    ModelEvaluator,
+    SearchSpec,
+    build_searcher,
+)
 from repro.envs.token_env import make_token_env
 from repro.models import init_params
 
 from .common import row, time_fn
 
 BATCH_SIZES = (1, 4)
+DEPTHS = (8, 64)
+PROMPT = (3, 5, 7)
 
 
 def _tiny_lm(vocab: int = 64):
@@ -43,47 +59,100 @@ def run(
     wave_size: int = 4,
     batch_sizes: tuple[int, ...] = BATCH_SIZES,
     top_k: int = 4,
+    depths: tuple[int, ...] = DEPTHS,
+    records: list | None = None,
 ) -> list[str]:
     cfg, params = _tiny_lm()
-    prompt = jnp.asarray([3, 5, 7], jnp.int32)
-    env = make_token_env(cfg, params, prompt, max_len=16, top_k=top_k,
-                         eos_token=1)
-    spec = SearchSpec(
-        algo="wu_uct", engine="async", num_simulations=num_simulations,
-        wave_size=wave_size, max_depth=6, max_sim_steps=6, max_width=top_k,
-        gamma=1.0,
-    )
-    model_ev = ModelEvaluator(cfg, params, top_k=top_k, eos_token=1)
+    prompt = jnp.asarray(PROMPT, jnp.int32)
     rows = []
 
-    for B in batch_sizes:
-        bspec = spec._replace(batch=B) if B > 1 else spec
-        model_search = build_searcher(env, bspec, evaluator=model_ev)
-        rollout_search = build_searcher(env, bspec)
-        if B > 1:
-            roots = jax.vmap(env.init)(
-                jax.random.split(jax.random.PRNGKey(0), B)
-            )
-            rngs = jax.random.split(jax.random.PRNGKey(1), B)
-        else:
-            roots = env.init(jax.random.PRNGKey(0))
-            rngs = jax.random.PRNGKey(1)
+    def record(name, seconds, B, depth, ticks, kind):
+        per_tick = seconds / max(ticks, 1)
+        if records is not None:
+            records.append({
+                "name": name, "kind": kind, "batch": B, "depth": depth,
+                "seconds": seconds, "searches_per_sec": B / seconds,
+                "ticks": ticks, "us_per_tick": per_tick * 1e6,
+            })
+        rows.append(
+            row(name, seconds,
+                f"{B / seconds:.2f} searches/s; {per_tick * 1e6:.0f} us/tick")
+        )
 
-        t_m = time_fn(model_search, roots, rngs, warmup=1, iters=3)
-        rows.append(row(f"model_eval_B{B}", t_m, f"{B / t_m:.2f} searches/s"))
-        t_r = time_fn(rollout_search, roots, rngs, warmup=1, iters=3)
-        rows.append(
-            row(f"rollout_eval_B{B}", t_r, f"{B / t_r:.2f} searches/s")
+    for di, depth in enumerate(depths):
+        # Leave room for a full rollout below the deepest expansion.
+        max_len = len(PROMPT) + 2 * depth + 2
+        env = make_token_env(cfg, params, prompt, max_len=max_len,
+                             top_k=top_k, eos_token=1)
+        spec = SearchSpec(
+            algo="wu_uct", engine="async", num_simulations=num_simulations,
+            wave_size=wave_size, max_depth=depth, max_sim_steps=depth,
+            max_width=top_k, gamma=1.0,
         )
-        rows.append(
-            row(f"model_eval_speedup_B{B}", 0.0, f"{t_r / t_m:.2f}x vs rollout")
-        )
+        model_ev = ModelEvaluator(cfg, params, top_k=top_k, eos_token=1)
+        cached_ev = CachedModelEvaluator(cfg, params, top_k=top_k, eos_token=1)
+
+        for B in batch_sizes:
+            bspec = spec._replace(batch=B) if B > 1 else spec
+            if B > 1:
+                roots = jax.vmap(env.init)(
+                    jax.random.split(jax.random.PRNGKey(0), B)
+                )
+                rngs = jax.random.split(jax.random.PRNGKey(1), B)
+            else:
+                roots = env.init(jax.random.PRNGKey(0))
+                rngs = jax.random.PRNGKey(1)
+
+            def bench(search):
+                # The first (warmup) call also yields the evaluator's own
+                # tick count — different evaluators sample different tokens
+                # and so tick different numbers of times.
+                ticks = int(jnp.max(jnp.atleast_1d(search(roots, rngs).ticks)))
+                return time_fn(search, roots, rngs, warmup=0, iters=3), ticks
+
+            prefill_search = build_searcher(env, bspec, evaluator=model_ev)
+            cached_search = build_searcher(env, bspec, evaluator=cached_ev)
+
+            t_p, ticks_p = bench(prefill_search)
+            record(f"prefill_eval_d{depth}_B{B}", t_p, B, depth, ticks_p,
+                   "prefill_per_tick")
+            t_c, ticks_c = bench(cached_search)
+            record(f"cached_eval_d{depth}_B{B}", t_c, B, depth, ticks_c,
+                   "cached_decode")
+            if records is not None:
+                records.append({
+                    "name": f"cached_speedup_d{depth}_B{B}",
+                    "kind": "speedup", "batch": B, "depth": depth,
+                    "speedup": t_p / t_c,
+                })
+            rows.append(
+                row(f"cached_speedup_d{depth}_B{B}", 0.0,
+                    f"{t_p / t_c:.2f}x vs prefill-per-tick")
+            )
+
+            if di == 0:
+                t_r, ticks_r = bench(build_searcher(env, bspec))
+                record(f"rollout_eval_d{depth}_B{B}", t_r, B, depth, ticks_r,
+                       "rollout")
     return rows
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--depth", type=int, nargs="*", default=list(DEPTHS),
+        help="max_depth sweep: prefill-per-tick cost grows with depth, "
+        "cached decode stays flat",
+    )
+    ap.add_argument("--batch", type=int, nargs="*", default=list(BATCH_SIZES))
+    ap.add_argument("--num-simulations", type=int, default=16)
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    for r in run():
+    for r in run(
+        num_simulations=args.num_simulations,
+        batch_sizes=tuple(args.batch),
+        depths=tuple(args.depth),
+    ):
         print(r)
 
 

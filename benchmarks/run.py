@@ -18,6 +18,7 @@ dry-run artifacts; see EXPERIMENTS.md §Roofline).
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -26,7 +27,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-list of module names")
     ap.add_argument("--fast", action="store_true", help="reduced budgets")
+    ap.add_argument(
+        "--json-dir", default=".",
+        help="where BENCH_*.json perf baselines are written",
+    )
     args = ap.parse_args()
+
+    # Machine-readable perf baselines: modules listed here append structured
+    # records which land in BENCH_<module>.json next to the CSV on stdout,
+    # so later PRs can diff throughput against this run.
+    json_records: dict[str, list] = {"model_eval": []}
 
     from . import (
         bench_async_scaling,
@@ -76,6 +86,8 @@ def main() -> None:
             num_simulations=8 if args.fast else 16,
             wave_size=4,
             batch_sizes=(1,) if args.fast else (1, 4),
+            depths=(8,) if args.fast else (8, 64),
+            records=json_records["model_eval"],
         ),
     }
     selected = args.only.split(",") if args.only else list(modules)
@@ -83,12 +95,24 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name in selected:
         t0 = time.time()
+        ok = True
         try:
             for line in modules[name]():
                 print(line, flush=True)
         except Exception as e:  # noqa: BLE001
+            ok = False
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
         print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
+        # Only a COMPLETE run may become the committed perf baseline — a
+        # partial sweep would silently read as a full one in future diffs.
+        if ok and json_records.get(name):
+            path = f"{args.json_dir}/BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(
+                    {"fast": args.fast, "rows": json_records[name]}, f,
+                    indent=2,
+                )
+            print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

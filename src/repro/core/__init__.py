@@ -7,74 +7,26 @@
 # tree_select kernel) and algorithm (WU-UCT + App. B baselines).  Leaf
 # evaluation is pluggable via `Evaluator` (`RolloutEvaluator` is the default
 # env rollout; `ModelEvaluator` batches every master tick into one LM
-# forward).
+# forward; `CachedModelEvaluator` makes that forward a single KV-cached
+# decode step).
 #
-# The old per-engine entry points below are deprecated shims for one
-# release; call `build_searcher` instead.
-import functools as _functools
-import warnings as _warnings
-
+# The pre-facade per-engine entry points (`run_*`, `make_*searcher`,
+# `make_algorithm`) finished their one-release deprecation window and are
+# gone from this namespace; the underlying functions remain importable from
+# their engine modules (`repro.core.wu_uct`, `repro.core.async_search`, …)
+# for tests and oracles, but callers should use `build_searcher`.
 from .api import SearchSpec, as_search_config, build_searcher, make_config
-from .evaluators import Evaluator, ModelEvaluator, RolloutEvaluator
+from .evaluators import (
+    CachedModelEvaluator,
+    Evaluator,
+    ModelEvaluator,
+    RolloutEvaluator,
+)
 from .policies import PolicyConfig
 from .tree import Tree, init_tree
 from .batched_tree import BatchedTree, init_batched_tree
 from .wu_uct import SearchConfig, SearchResult, play_episode
 from .async_search import AsyncTickTrace
-from . import async_search as _async_search
-from . import baselines as _baselines
-from . import batched_async_search as _batched_async_search
-from . import batched_search as _batched_search
-from . import wu_uct as _wu_uct
-
-
-def _deprecated(name: str, fn, instead: str):
-    @_functools.wraps(fn)
-    def wrapper(*args, **kwargs):
-        _warnings.warn(
-            f"repro.core.{name} is deprecated; use {instead} "
-            "(see repro.core.api).",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return fn(*args, **kwargs)
-
-    return wrapper
-
-
-# --- deprecated engine entry points (one release of shim) -------------------
-_SPEC = "build_searcher(env, SearchSpec(...))"
-run_search = _deprecated(
-    "run_search", _wu_uct.run_search, f"{_SPEC} with engine='wave'")
-run_search_batched = _deprecated(
-    "run_search_batched", _batched_search.run_search_batched,
-    f"{_SPEC} with engine='wave', batch=B")
-run_async_search = _deprecated(
-    "run_async_search", _async_search.run_async_search,
-    f"{_SPEC} with engine='async'")
-run_async_search_batched = _deprecated(
-    "run_async_search_batched", _batched_async_search.run_async_search_batched,
-    f"{_SPEC} with engine='async', batch=B")
-run_leafp = _deprecated(
-    "run_leafp", _baselines.run_leafp, f"{_SPEC} with algo='leafp'")
-run_treep = _deprecated(
-    "run_treep", _baselines.run_treep, f"{_SPEC} with algo='treep'")
-run_rootp = _deprecated(
-    "run_rootp", _baselines.run_rootp, f"{_SPEC} with algo='rootp'")
-make_searcher = _deprecated(
-    "make_searcher", _wu_uct.make_searcher, f"{_SPEC} with engine='wave'")
-make_async_searcher = _deprecated(
-    "make_async_searcher", _async_search.make_async_searcher,
-    f"{_SPEC} with engine='async'")
-make_batched_searcher = _deprecated(
-    "make_batched_searcher", _batched_search.make_batched_searcher,
-    f"{_SPEC} with engine='wave', batch=B")
-make_batched_async_searcher = _deprecated(
-    "make_batched_async_searcher",
-    _batched_async_search.make_batched_async_searcher,
-    f"{_SPEC} with engine='async', batch=B")
-make_algorithm = _deprecated(
-    "make_algorithm", _baselines.make_algorithm, f"{_SPEC} with algo=...")
 
 __all__ = [
     # the front door
@@ -86,6 +38,7 @@ __all__ = [
     "Evaluator",
     "RolloutEvaluator",
     "ModelEvaluator",
+    "CachedModelEvaluator",
     # configs / results / trees
     "AsyncTickTrace",
     "PolicyConfig",
@@ -96,17 +49,4 @@ __all__ = [
     "BatchedTree",
     "init_batched_tree",
     "play_episode",
-    # deprecated shims
-    "make_algorithm",
-    "make_async_searcher",
-    "make_batched_async_searcher",
-    "make_batched_searcher",
-    "make_searcher",
-    "run_async_search",
-    "run_async_search_batched",
-    "run_leafp",
-    "run_rootp",
-    "run_search",
-    "run_search_batched",
-    "run_treep",
 ]

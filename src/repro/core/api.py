@@ -37,7 +37,7 @@ from .async_search import run_async_search
 from .baselines import run_leafp, run_rootp
 from .batched_async_search import run_async_search_batched
 from .batched_search import run_search_batched
-from .evaluators import Evaluator, ModelEvaluator
+from .evaluators import CachedModelEvaluator, Evaluator, ModelEvaluator
 from .policies import PolicyConfig
 from .wu_uct import SearchConfig, run_search
 
@@ -153,6 +153,13 @@ def build_searcher(
         raise ValueError(
             f"ModelEvaluator(top_k={evaluator.top_k}) does not match "
             f"env.num_actions={env.num_actions}"
+        )
+    if isinstance(evaluator, CachedModelEvaluator) and spec.engine != "async":
+        # The KV slot cache lives in the async engines' slot-aux state; the
+        # wave engines evaluate whole rollouts per slot without it.
+        raise ValueError(
+            "CachedModelEvaluator requires engine='async' (the wave engines "
+            "carry no slot cache; use ModelEvaluator)"
         )
     if spec.algo in ("leafp", "rootp"):
         if spec.engine == "async":

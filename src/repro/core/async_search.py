@@ -41,6 +41,10 @@ class AsyncTickTrace(NamedTuple):
     Leading axis is the tick index ``K``; the batched engine adds a tree axis
     ``B`` after it.  ``alive`` marks ticks that actually advanced the search
     (``t_done < T`` at tick entry); later snapshots are frozen copies.
+    ``state_len`` / ``cache_len`` are ``None`` unless the evaluator carries
+    a sequence state / a slot-aux cache (``CachedModelEvaluator``) — they
+    let invariant tests check that the cache depth tracks the slot's prefix
+    across settle/refill.
     """
 
     O: jax.Array         # f32[K, M]    in-flight counts after the tick
@@ -49,19 +53,25 @@ class AsyncTickTrace(NamedTuple):
     sim_node: jax.Array  # i32[K, W]    node each slot's rollout is charged to
     t_done: jax.Array    # i32[K]       completed simulations so far
     alive: jax.Array     # bool[K]
+    state_len: Optional[jax.Array] = None  # i32[K, W] slot token prefix length
+    cache_len: Optional[jax.Array] = None  # i32[K, W] evaluator cache depth
 
 
-def tick_snapshot(carry, alive) -> AsyncTickTrace:
+def tick_snapshot(carry, alive, cache_len=None) -> AsyncTickTrace:
     """One :class:`AsyncTickTrace` row from a master-loop carry.
 
     Both async engines carry ``(tree, slots, rng, t_launch, t_done, ...)``,
     so the trace schema is defined once here — single-tree ``Tree``/slots and
-    ``BatchedTree``/batched slots expose the same field names.
+    ``BatchedTree``/batched slots expose the same field names.  ``cache_len``
+    is the evaluator's per-slot cache depth (``evaluator.aux_len``), already
+    reshaped to the slot table's layout by the engine.
     """
     tree, slots = carry[0], carry[1]
     return AsyncTickTrace(
         O=tree.O, parent=tree.parent, kind=slots.kind,
         sim_node=slots.sim_node, t_done=carry[4], alive=alive,
+        state_len=getattr(slots.state, "length", None),
+        cache_len=cache_len,
     )
 
 
@@ -142,15 +152,15 @@ def run_async_search(
     # ------------------------------------------------------------------
     def refill(carry):
         """Fill FREE slots with fresh selections (Algorithm 1 main loop)."""
-        tree, slots, rng, t_launch, t_done = carry
+        tree, slots, rng, t_launch, t_done, aux = carry
 
         def body(j, c):
-            tree, slots, rng, t_launch, t_done = c
+            tree, slots, rng, t_launch, t_done, aux = c
             rng, k_t, k_e = jax.random.split(rng, 3)
             want = (slots.kind[j] == FREE) & (t_launch < T)
 
             def do_fill(op):
-                tree, slots, t_launch, t_done = op
+                tree, slots, t_launch, t_done, aux = op
                 node = traverse(tree, k_t, cfg, use_kernel)
                 kids = tree.children[node]
                 n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
@@ -179,6 +189,14 @@ def run_async_search(
 
                 tree = jax.lax.cond(is_term, settle_term, lambda t: t, tree)
                 parent_state = tree_lib.get_state(tree, node)
+                # Re-sync the evaluator's slot cache with the new path's
+                # prefix (no-op for stateless evaluators; terminal hits
+                # launch nothing, so their cache stays untouched).
+                aux2 = evaluator.refill_aux(
+                    cfg, aux, jnp.reshape(j, (1,)),
+                    jax.tree.map(lambda x: x[None], parent_state),
+                    jnp.reshape(jnp.logical_not(is_term), (1,)),
+                )
                 slots2 = set_slot(
                     slots,
                     j,
@@ -198,28 +216,30 @@ def run_async_search(
                     slots2,
                     t_launch + 1,
                     t_done + is_term.astype(jnp.int32),
+                    aux2,
                 )
 
-            tree, slots, t_launch, t_done = jax.lax.cond(
-                want, do_fill, lambda op: op, (tree, slots, t_launch, t_done)
+            tree, slots, t_launch, t_done, aux = jax.lax.cond(
+                want, do_fill, lambda op: op,
+                (tree, slots, t_launch, t_done, aux),
             )
-            return tree, slots, rng, t_launch, t_done
+            return tree, slots, rng, t_launch, t_done, aux
 
         return jax.lax.fori_loop(0, W, body, carry)
 
-    def tick(slots: _AsyncSlots, rng) -> tuple[_AsyncSlots, Pytree, jax.Array, jax.Array]:
+    def tick(slots: _AsyncSlots, rng, aux):
         """Advance every busy slot by one env step (the parallel part)."""
         keys = jax.random.split(rng, W)
-        out = evaluator.tick(
+        out, aux = evaluator.tick(
             cfg, slots.kind, slots.act, slots.state, slots.rollout_done,
-            slots.acc, slots.disc, slots.steps, keys,
+            slots.acc, slots.disc, slots.steps, keys, aux,
         )
         new_state, r_edge, done_edge, acc, disc, steps, rollout_done = out
         slots = slots._replace(
             state=new_state, acc=acc, disc=disc, steps=steps,
             rollout_done=rollout_done,
         )
-        return slots, r_edge, done_edge
+        return slots, r_edge, done_edge, aux
 
     def settle_finished(carry, r_edge, done_edge):
         """EXPAND→SIM transitions (finalize child) + completed rollouts."""
@@ -262,25 +282,24 @@ def run_async_search(
         return jax.lax.fori_loop(0, W, body, (tree, slots, t_done))
 
     def cond(carry):
-        _, _, _, _, t_done, _, _ = carry
-        return t_done < T
+        return carry[4] < T          # t_done
 
     def master_iter(carry):
-        tree, slots, rng, t_launch, t_done, ticks, max_o = carry
+        tree, slots, rng, t_launch, t_done, ticks, max_o, aux = carry
         rng, k_tick = jax.random.split(rng)
-        tree, slots, rng, t_launch, t_done = refill(
-            (tree, slots, rng, t_launch, t_done)
+        tree, slots, rng, t_launch, t_done, aux = refill(
+            (tree, slots, rng, t_launch, t_done, aux)
         )
         max_o = jnp.maximum(max_o, tree.O[0])
-        slots, r_edge, done_edge = tick(slots, k_tick)
+        slots, r_edge, done_edge, aux = tick(slots, k_tick, aux)
         tree, slots, t_done = settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
-        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o
+        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux
 
     init = (
         tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0),
-        jnp.float32(0.0),
+        jnp.float32(0.0), evaluator.init_aux(root_state, (W,)),
     )
     if trace_ticks > 0:
         # Same program as the while_loop below (master_iter applied while
@@ -291,13 +310,13 @@ def run_async_search(
             new = jax.tree.map(
                 lambda a, b: jnp.where(alive, a, b), master_iter(carry), carry
             )
-            return new, tick_snapshot(new, alive)
+            return new, tick_snapshot(new, alive, evaluator.aux_len(new[7]))
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
-        tree, slots, _, _, _, ticks, max_o = final
+        tree, slots, _, _, _, ticks, max_o, _ = final
     else:
         trace = None
-        tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
+        tree, slots, _, _, _, ticks, max_o, _ = jax.lax.while_loop(
             cond, master_iter, init
         )
 

@@ -156,7 +156,7 @@ def run_async_search_batched(
         traversal level."""
 
         def body(j, c):
-            tree, slots, rng, t_launch, t_done = c
+            tree, slots, rng, t_launch, t_done, aux = c
             rng, k_t, k_e = _split_each(rng, 3)
             want = (slots.kind[:, j] == FREE) & (t_launch < T)
 
@@ -185,6 +185,12 @@ def run_async_search_batched(
                 mask=want & is_term,
             )
             parent_state = btree.get_state(tree, nodes)
+            # Re-sync the evaluator's slot caches: slot column j of every
+            # tree lives at flat row b·W + j of the aux pool.
+            aux = evaluator.refill_aux(
+                cfg, aux, bidx * W + j, parent_state,
+                want & jnp.logical_not(is_term),
+            )
             slots = set_slot(
                 slots,
                 j,
@@ -202,11 +208,11 @@ def run_async_search_batched(
             )
             t_launch = t_launch + want.astype(jnp.int32)
             t_done = t_done + (want & is_term).astype(jnp.int32)
-            return tree, slots, rng, t_launch, t_done
+            return tree, slots, rng, t_launch, t_done, aux
 
         return jax.lax.fori_loop(0, W, body, carry)
 
-    def tick(slots: _BatchedAsyncSlots, rng):
+    def tick(slots: _BatchedAsyncSlots, rng, aux):
         """Advance every busy slot by one env step — vmapped over the flat
         [B·W] axis, forming one rollout batch (the future model-forward
         hook); shards over ('pod', 'data') via ``constrain``."""
@@ -223,7 +229,9 @@ def run_async_search_batched(
         )
         if constrain is not None:
             args = constrain(args)
-        out = evaluator.tick(cfg, *args)
+        # aux stays outside `constrain`: model-cache leaves lead with the
+        # layer axis, not the slot axis the hook shards.
+        out, aux = evaluator.tick(cfg, *args, aux)
         if constrain is not None:
             out = constrain(out)
         out = jax.tree.map(lambda x: x.reshape((B, W) + x.shape[1:]), out)
@@ -232,7 +240,7 @@ def run_async_search_batched(
             state=new_state, acc=acc, disc=disc, steps=steps,
             rollout_done=rollout_done,
         )
-        return slots, r_edge, done_edge
+        return slots, r_edge, done_edge, aux
 
     def settle_finished(carry, r_edge, done_edge):
         """EXPAND→SIM transitions (finalize child) + completed rollouts."""
@@ -271,39 +279,50 @@ def run_async_search_batched(
         return carry[4] < T          # t_done, per tree
 
     def master_iter(carry):
-        tree, slots, rng, t_launch, t_done, ticks, max_o = carry
+        tree, slots, rng, t_launch, t_done, ticks, max_o, aux = carry
         rng, k_tick = _split_each(rng, 2)
-        tree, slots, rng, t_launch, t_done = refill(
-            (tree, slots, rng, t_launch, t_done)
+        tree, slots, rng, t_launch, t_done, aux = refill(
+            (tree, slots, rng, t_launch, t_done, aux)
         )
         max_o = jnp.maximum(max_o, tree.O[:, 0])
-        slots, r_edge, done_edge = tick(slots, k_tick)
+        slots, r_edge, done_edge, aux = tick(slots, k_tick, aux)
         tree, slots, t_done = settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
-        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o
+        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux
 
     def step(carry):
         """One master tick with finished trees frozen — the same per-lane
-        masking ``vmap`` would apply to the single engine's while_loop."""
-        return _freeze_done(cond(carry), master_iter(carry), carry)
+        masking ``vmap`` would apply to the single engine's while_loop.
+
+        The evaluator aux rides outside the freeze: its leaves don't lead
+        with ``[B]`` (model caches lead with the layer axis), and a finished
+        tree's cache drift is unobservable — its slots are frozen, so
+        nothing it decodes ever reaches the tree again.
+        """
+        new = master_iter(carry)
+        return _freeze_done(cond(carry), new[:-1], carry[:-1]) + (new[-1],)
 
     init = (
         tree0, slot_state0(), rngs,
         jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
         jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
+        evaluator.init_aux(root_states, (B, W)),
     )
     if trace_ticks > 0:
         def scan_body(carry, _):
             alive = cond(carry)
             new = step(carry)
-            return new, tick_snapshot(new, alive)
+            ev_len = evaluator.aux_len(new[7])
+            if ev_len is not None:
+                ev_len = ev_len.reshape(B, W)
+            return new, tick_snapshot(new, alive, ev_len)
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
-        tree, slots, _, _, _, ticks, max_o = final
+        tree, slots, _, _, _, ticks, max_o, _ = final
     else:
         trace = None
-        tree, slots, _, _, _, ticks, max_o = jax.lax.while_loop(
+        tree, slots, _, _, _, ticks, max_o, _ = jax.lax.while_loop(
             lambda c: jnp.any(cond(c)), step, init
         )
 

@@ -21,9 +21,16 @@ Two implementations ship:
   ``env.step``.  Plugged into the async engines' flat ``[B·W]`` tick batch,
   this realizes the ROADMAP follow-up: every master tick feeds one model
   forward pass.
+* :class:`CachedModelEvaluator` — the same contract with a per-slot KV
+  decode cache carried in the engines' slot-aux state, so the one forward
+  per master tick is a single batched ``models.decode_step`` (O(1) in
+  prefix length) instead of a full-prefix ``models.forward`` (O(depth)).
+  Slot refills roll the cache back to the common prefix with the newly
+  assigned tree path and re-decode only the divergent suffix.
 
-The evaluator contract (``init_state`` / ``tick`` / ``rollout`` / ``value``)
-is identical across implementations, so engines stay evaluator-agnostic and
+The evaluator contract (``init_state`` / ``tick`` / ``rollout`` / ``value``
+plus the slot-aux hooks ``init_aux`` / ``refill_aux``) is identical across
+implementations, so engines stay evaluator-agnostic and
 :func:`repro.core.api.build_searcher` can swap them freely.
 """
 
@@ -80,18 +87,46 @@ class Evaluator:
 
     * ``init_state(example_state, prefix)`` — allocate zeroed per-slot env
       state buffers with leading ``prefix`` axes (the async slot pools);
-    * ``tick(cfg, kind, act, state, rollout_done, acc, disc, steps, keys)``
-      — advance a whole batch of in-flight slots by one environment step.
-      Leading axis is *all* in-flight slots of a master tick: ``[W]`` for
-      the single async engine, the flat ``[B·W]`` for the batched one.
-      Returns ``(new_state, r, done, acc, disc, steps, rollout_done)``;
+    * ``tick(cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+      aux)`` — advance a whole batch of in-flight slots by one environment
+      step.  Leading axis is *all* in-flight slots of a master tick: ``[W]``
+      for the single async engine, the flat ``[B·W]`` for the batched one.
+      Returns ``((new_state, r, done, acc, disc, steps, rollout_done),
+      aux)``;
     * ``rollout(cfg, state, already_done, rng)`` — full discounted
       simulation return from one state (the wave engines vmap this per
       slot);
     * ``value(state)`` — bootstrap value ``V(s)`` for truncated rollouts.
+
+    **Slot aux** is evaluator-owned per-slot state the async engines carry
+    *alongside* the env-state slot pools but never write into the tree (the
+    KV decode cache of :class:`CachedModelEvaluator` — node states must stay
+    compact).  Engines thread it unconditionally; the default hooks make it
+    an empty pytree so stateless evaluators cost nothing:
+
+    * ``init_aux(root_states, prefix)`` — build the flat ``[N]`` aux pool
+      (``N = prod(prefix)``; ``root_states`` leaves lead with
+      ``prefix[:-1]`` and broadcast over the trailing slot axis);
+    * ``refill_aux(cfg, aux, rows, new_state, mask)`` — re-sync aux rows
+      ``rows`` (flat ``i32[R]`` indices) with the freshly assigned
+      ``new_state`` (leaves lead with ``[R]``) where ``mask`` holds;
+    * ``aux_len(aux)`` — the per-slot cache depth vector for trace-mode
+      invariant checking (``None`` when the evaluator carries no cache).
     """
 
     env: Optional[Environment] = None
+
+    def init_aux(self, root_states: Pytree, prefix: tuple) -> Pytree:
+        del root_states, prefix
+        return ()
+
+    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
+        del cfg, rows, new_state, mask
+        return aux
+
+    def aux_len(self, aux) -> Optional[jax.Array]:
+        del aux
+        return None
 
     def init_state(self, example_state: Pytree, prefix: tuple) -> Pytree:
         """Zeroed per-slot state buffers shaped ``prefix + leaf.shape``."""
@@ -102,7 +137,8 @@ class Evaluator:
             example_state,
         )
 
-    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+             aux=()):
         raise NotImplementedError
 
     def value(self, state: Pytree) -> jax.Array:
@@ -130,7 +166,7 @@ class Evaluator:
         def body(c):
             st, done, acc, disc, rng, steps = c
             rng, k = jax.random.split(rng)
-            st, _, _, acc, disc, steps, done = self.tick(
+            (st, _, _, acc, disc, steps, done), _ = self.tick(
                 cfg,
                 jnp.full((1,), SIM, jnp.int32),
                 jnp.zeros((1,), jnp.int32),
@@ -190,10 +226,12 @@ class RolloutEvaluator(Evaluator):
 
         return one
 
-    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
-        return jax.vmap(self._one_step(cfg.gamma))(
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+             aux=()):
+        out = jax.vmap(self._one_step(cfg.gamma))(
             kind, act, state, rollout_done, acc, disc, steps, keys
         )
+        return out, aux
 
     def rollout(self, cfg, state, already_done, rng) -> jax.Array:
         """Discounted simulation return with optional value bootstrap/mixing
@@ -297,38 +335,51 @@ class ModelEvaluator(Evaluator):
         pos = jnp.maximum(lengths - 1, 0)
         return jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
 
-    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys):
+    def _transition(self, cfg, kind, act, state, rollout_done, acc, disc,
+                    steps, keys, pol_logits, rew_logits):
+        """Logits → (action, token, reward) → env transition → accounting.
+
+        The piece shared with :class:`CachedModelEvaluator`: everything
+        after the logits are in hand is identical, so cached and uncached
+        evaluation explore the same MDP by construction.
+        """
         n = state.length.shape[0]
         idx = jnp.arange(n)
+        top_vals, top_idx = jax.lax.top_k(pol_logits, self.top_k)
+        ranks = jax.vmap(jax.random.categorical)(keys, top_vals)
+        a = jnp.where(kind == EXPAND, act, ranks).astype(jnp.int32)
+        token = top_idx[idx, jnp.clip(a, 0, self.top_k - 1)]
+        logp = jax.nn.log_softmax(rew_logits.astype(jnp.float32))[idx, token]
 
+        # The env's own transition core, applied to the whole slot batch.
+        # Deferred import: token_env pulls in the models stack, which a
+        # model-free `import repro.core` must not pay for.
+        from ..envs.token_env import apply_token
+
+        nxt, r, done = apply_token(state, token, logp, self.eos_token)
+        out = slot_accounting(
+            cfg.gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
+            steps,
+        )
+        return out, token
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+             aux=()):
         # --- the one batched forward of this master tick -------------------
         pol = self._position_logits(
             self.params, self.model_cfg, state.tokens, state.length
         )
-        top_vals, top_idx = jax.lax.top_k(pol, self.top_k)
-        ranks = jax.vmap(jax.random.categorical)(keys, top_vals)
-        a = jnp.where(kind == EXPAND, act, ranks).astype(jnp.int32)
-        token = top_idx[idx, jnp.clip(a, 0, self.top_k - 1)]
-
         if self.reward_params is None:
-            rew_logits = pol
+            rew = pol
         else:
-            rew_logits = self._position_logits(
+            rew = self._position_logits(
                 self.reward_params, self.reward_cfg, state.tokens, state.length
             )
-        logp = jax.nn.log_softmax(rew_logits.astype(jnp.float32))[idx, token]
-
-        # The env's own transition core, applied to the whole slot batch —
-        # the evaluator explores the same MDP by construction.  Deferred
-        # import: token_env pulls in the models stack, which a model-free
-        # `import repro.core` must not pay for.
-        from ..envs.token_env import apply_token
-
-        nxt, r, done = apply_token(state, token, logp, self.eos_token)
-        return slot_accounting(
-            cfg.gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
-            steps,
+        out, _ = self._transition(
+            cfg, kind, act, state, rollout_done, acc, disc, steps, keys, pol,
+            rew,
         )
+        return out, aux
 
     def value(self, state: Pytree) -> jax.Array:
         if self.value_fn is None:
@@ -337,3 +388,260 @@ class ModelEvaluator(Evaluator):
 
     def has_value(self) -> bool:
         return self.value_fn is not None
+
+
+# ---------------------------------------------------------------------------
+# CachedModelEvaluator — one batched decode step per master tick.
+# ---------------------------------------------------------------------------
+
+
+class CachedModelEvaluator(ModelEvaluator):
+    """:class:`ModelEvaluator` with a per-slot KV decode cache in slot aux.
+
+    The uncached evaluator re-runs a **full-prefix** forward for every slot
+    on every master tick — O(depth) work per tick.  This evaluator carries
+    the ``models.init_cache`` layout (the same cache contract the serving
+    engine uses) per slot inside the async engines' aux state, so a master
+    tick costs **one batched ``decode_step``** over all ``[B·W]`` in-flight
+    slots — O(1) in prefix length, routed through the Pallas
+    ``decode_attention`` kernel via the per-slot ragged ``cache['len']``
+    vector.
+
+    Aux layout (flat slot axis ``N``; model-cache leaves carry ``N`` on axis
+    1 under their layer-stacked axis, evaluator-side leaves on axis 0):
+
+    * ``tokens  i32[N, S]`` — the tokens fed into the cache (valid ``< len``);
+    * ``len     i32[N]``    — tokens processed per slot (== the slot's
+      prefix depth; the engines' trace mode snapshots it via
+      :meth:`aux_len` for invariant tests);
+    * ``pol/rew`` — per model: the KV cache (sans ``len``) plus the stored
+      logits ``[N, V]`` at each slot's current position (``rew`` is empty
+      when the reward model *is* the policy model).
+
+    **Prefix-aware refill** (:meth:`refill_aux`): when a slot settles and is
+    handed a new tree path, the path *is* the token prefix — the cache rolls
+    ``len`` back to the common prefix with the tokens it already processed
+    and re-decodes only the divergent suffix (a data-dependent
+    ``while_loop`` of decode steps; a disjoint prefix degenerates to the
+    token-by-token re-prefill fallback).  The last prompt token is always
+    re-decoded so the stored logits are the new position's logits.
+
+    Garbage-row contract (shared with ``models.prefill_ragged`` and the
+    serving engine): KV rows at positions ``>= len`` are invalid; attention
+    masks them and every write lands at position ``len`` before ``len``
+    moves past it, so they are overwritten before ever becoming visible.
+    This rollback story needs position-indexed cache rows, hence KV-cache
+    families only (a recurrent SSM state cannot be rolled back).
+
+    Async engines only: the wave engines evaluate rollouts per slot without
+    aux plumbing (``build_searcher`` enforces this).
+    """
+
+    def __init__(
+        self,
+        model_cfg,
+        params,
+        *,
+        top_k: int,
+        eos_token: int = 0,
+        reward_cfg=None,
+        reward_params=None,
+        value_fn: Optional[Callable] = None,
+        decode_fn: Optional[Callable] = None,
+        prefill_fn: Optional[Callable] = None,
+    ):
+        super().__init__(
+            model_cfg, params, top_k=top_k, eos_token=eos_token,
+            reward_cfg=reward_cfg, reward_params=reward_params,
+            value_fn=value_fn,
+        )
+        if decode_fn is None:
+            from ..models import decode_step as decode_fn  # circular-safe
+        if prefill_fn is None:
+            from ..models import prefill_ragged as prefill_fn
+        self.decode_fn = decode_fn
+        self.prefill_fn = prefill_fn
+        from ..models import KV_CACHE_FAMILIES
+
+        cfgs = [model_cfg] + ([self.reward_cfg] if reward_params is not None
+                              else [])
+        for c in cfgs:
+            if c.family not in KV_CACHE_FAMILIES:
+                raise ValueError(
+                    "CachedModelEvaluator needs a rollback-able KV cache; "
+                    f"family {c.family!r} carries recurrent state "
+                    "(use ModelEvaluator)"
+                )
+
+    # -- aux structure helpers ---------------------------------------------
+
+    def _branches(self):
+        """(aux key, params, cfg) per model the cache tracks."""
+        out = [("pol", self.params, self.model_cfg)]
+        if self.reward_params is not None:
+            out.append(("rew", self.reward_params, self.reward_cfg))
+        return out
+
+    def _take_rows(self, aux, rows):
+        def branch(b):
+            if b == ():
+                return ()
+            return {
+                "cache": jax.tree.map(lambda x: x[:, rows], b["cache"]),
+                "logits": b["logits"][rows],
+            }
+
+        return {
+            "tokens": aux["tokens"][rows],
+            "len": aux["len"][rows],
+            "pol": branch(aux["pol"]),
+            "rew": branch(aux["rew"]),
+        }
+
+    def _put_rows(self, aux, rows, sub):
+        def branch(b, sb):
+            if b == ():
+                return ()
+            return {
+                "cache": jax.tree.map(
+                    lambda x, y: x.at[:, rows].set(y), b["cache"], sb["cache"]
+                ),
+                "logits": b["logits"].at[rows].set(sb["logits"]),
+            }
+
+        return {
+            "tokens": aux["tokens"].at[rows].set(sub["tokens"]),
+            "len": aux["len"].at[rows].set(sub["len"]),
+            "pol": branch(aux["pol"], sub["pol"]),
+            "rew": branch(aux["rew"], sub["rew"]),
+        }
+
+    def _advance(self, aux, token, fed):
+        """Feed one token per slot through the cached models.
+
+        Every slot decodes (ONE batched ``decode_step`` per model); only
+        ``fed`` slots commit — their ``len`` advances and their stored
+        logits refresh.  Non-fed slots' K/V writes land at their own
+        position ``len`` (the garbage region) and are overwritten before
+        ``len`` ever moves past them.
+        """
+        idx = jnp.arange(token.shape[0])
+        s_max = aux["tokens"].shape[-1]
+        length = aux["len"]
+        safe = jnp.minimum(length, s_max - 1)
+        prev = aux["tokens"][idx, safe]
+        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
+
+        out = dict(
+            tokens=tokens,
+            len=jnp.where(fed, length + 1, length),
+            pol=(), rew=(),
+        )
+        for key, params, cfg in self._branches():
+            b = aux[key]
+            logits, cache = self.decode_fn(
+                params, cfg, token, dict(b["cache"], len=safe)
+            )
+            cache.pop("len")
+            out[key] = {
+                "cache": cache,
+                "logits": jnp.where(
+                    fed[:, None], logits, b["logits"]
+                ).astype(b["logits"].dtype),
+            }
+        return out
+
+    # -- evaluator protocol -------------------------------------------------
+
+    def init_aux(self, root_states: Pytree, prefix: tuple) -> Pytree:
+        """Prefill every slot's cache with its root prompt — once.
+
+        ``root_states`` leaves lead with ``prefix[:-1]`` (per-tree roots in
+        the batched engine); each root broadcasts over the trailing slot
+        axis and the flat ``[N]`` pool prefills in ONE ragged batched
+        forward (``models.prefill_ragged``).
+        """
+        from ..models import init_cache
+
+        n = 1
+        for p in prefix:
+            n *= int(p)
+        lead = len(prefix) - 1
+
+        def flat(x):
+            x = jnp.expand_dims(x, lead)
+            x = jnp.broadcast_to(x, tuple(prefix) + x.shape[lead + 1:])
+            return x.reshape((n,) + x.shape[len(prefix):])
+
+        state = jax.tree.map(flat, root_states)
+        tokens = jnp.asarray(state.tokens, jnp.int32)
+        lengths = jnp.asarray(state.length, jnp.int32)
+        s_max = tokens.shape[-1]
+
+        aux = {
+            "tokens": tokens, "len": lengths, "pol": (), "rew": (),
+        }
+        for key, params, cfg in self._branches():
+            logits, cache = self.prefill_fn(
+                params, cfg, tokens, lengths, init_cache(cfg, n, s_max)
+            )
+            cache.pop("len")
+            aux[key] = {"cache": cache, "logits": logits}
+        return aux
+
+    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
+        del cfg
+        sub = self._take_rows(aux, rows)
+        r = rows.shape[0]
+        s_max = sub["tokens"].shape[-1]
+        pos = jnp.arange(s_max)
+        l_new = jnp.asarray(new_state.length, jnp.int32)
+        old_len = sub["len"]
+
+        # Common prefix of the tokens already in the cache and the new
+        # path's tokens (the re-prefill fallback is the c == 0 degenerate).
+        limit = jnp.minimum(old_len, l_new)
+        neq = (sub["tokens"] != new_state.tokens) & (pos[None, :] < limit[:, None])
+        first = jnp.min(jnp.where(neq, pos[None, :], s_max), axis=1)
+        common = jnp.minimum(first, limit)
+        # Re-decode at least the final prompt token: the stored logits must
+        # be the logits at the NEW position L-1.
+        start = jnp.minimum(common, jnp.maximum(l_new - 1, 0))
+
+        start = jnp.where(mask, start, old_len)
+        target = jnp.where(mask, l_new, old_len)
+        tokens = jnp.where(mask[:, None], new_state.tokens, sub["tokens"])
+        sub = dict(sub, tokens=tokens, len=start)
+
+        def cond(c):
+            return jnp.any(c["len"] < target)
+
+        def body(c):
+            feed = c["len"] < target
+            tok = c["tokens"][jnp.arange(r), jnp.minimum(c["len"], s_max - 1)]
+            return self._advance(c, tok, feed)
+
+        sub = jax.lax.while_loop(cond, body, sub)
+        return self._put_rows(aux, rows, sub)
+
+    def aux_len(self, aux) -> Optional[jax.Array]:
+        return aux["len"]
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+             aux=()):
+        if isinstance(aux, tuple) and aux == ():
+            raise ValueError(
+                "CachedModelEvaluator.tick needs its slot-aux cache "
+                "(init_aux); it runs only inside the async engines — build "
+                "with SearchSpec(engine='async') / build_searcher, or use "
+                "ModelEvaluator for cache-free evaluation"
+            )
+        pol = aux["pol"]["logits"]
+        rew = aux["rew"]["logits"] if aux["rew"] != () else pol
+        out, token = self._transition(
+            cfg, kind, act, state, rollout_done, acc, disc, steps, keys, pol,
+            rew,
+        )
+        # Exactly the slots whose env state appended a token this tick.
+        fed = (kind != FREE) & jnp.logical_not(state.done)
+        return out, self._advance(aux, token, fed)

@@ -26,7 +26,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(
-    len_ref,    # [1] i32 (SMEM) — valid KV prefix length
+    len_ref,    # [B] i32 (SMEM) — per-batch valid KV prefix length
     q_ref,      # [Hq, D]
     k_ref,      # [block_k, Hkv, D]
     v_ref,      # [block_k, Hkv, D]
@@ -41,7 +41,7 @@ def _decode_kernel(
     group: int,
 ):
     ki = pl.program_id(1)
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0)]
 
     @pl.when(ki == 0)
     def _init():
@@ -84,7 +84,7 @@ def decode_attention_fwd(
     q: jax.Array,        # [B, Hq, D]
     k_cache: jax.Array,  # [B, S, Hkv, D]
     v_cache: jax.Array,  # [B, S, Hkv, D]
-    kv_len: jax.Array,   # [] i32
+    kv_len: jax.Array,   # [] or [B] i32 — ragged per-batch prefix lengths
     *,
     block_k: int = 512,
     interpret: bool = True,
@@ -96,7 +96,11 @@ def decode_attention_fwd(
     assert s % block_k == 0
     n_kv = s // block_k
     scale = 1.0 / math.sqrt(d)
-    lens = jnp.full((1,), kv_len, jnp.int32)
+    # Scalar and per-batch (continuous batching / async-slot cache) lengths
+    # share one kernel: the scalar broadcasts to a [B] SMEM vector.
+    lens = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,)
+    )
 
     kernel = functools.partial(
         _decode_kernel, scale=scale, block_k=block_k, n_kv=n_kv, group=group

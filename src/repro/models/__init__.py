@@ -1,5 +1,6 @@
 from .config import ModelConfig
 from .lm import (
+    KV_CACHE_FAMILIES,
     abstract_params,
     decode_step,
     forward,
@@ -7,9 +8,11 @@ from .lm import (
     init_params,
     loss_fn,
     prefill,
+    prefill_ragged,
 )
 
 __all__ = [
+    "KV_CACHE_FAMILIES",
     "ModelConfig",
     "abstract_params",
     "decode_step",
@@ -18,4 +21,5 @@ __all__ = [
     "init_params",
     "loss_fn",
     "prefill",
+    "prefill_ragged",
 ]

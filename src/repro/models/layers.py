@@ -216,11 +216,11 @@ def attention_block(
     """Full attention block; returns (out, new_cache).
 
     ``cfg.attn_impl == 'pallas'`` routes the no-cache causal path through the
-    flash-attention TPU kernel and single-token decode through the split-KV
-    decode kernel (interpret mode on CPU); paths the kernels don't cover
-    (chunked prefill with offsets, vector cache lengths) fall back to the
-    jnp oracle — which the kernels are verified against bit-for-bit in
-    tests/test_kernels.py.
+    flash-attention TPU kernel and single-token decode — scalar or per-slot
+    vector cache lengths — through the split-KV decode kernel (interpret
+    mode on CPU); paths the kernels don't cover (chunked prefill with
+    offsets) fall back to the jnp oracle — which the kernels are verified
+    against bit-for-bit in tests/test_kernels.py.
     """
     q, k, v = attention_qkv(p, cfg, x, positions, rope=rope)
     if cache is None:
@@ -255,7 +255,9 @@ def attention_block(
             vc = cache["v"].at[bidx, start].set(v[:, 0].astype(cache["v"].dtype))
         new_len = start + x.shape[1]
         if x.shape[1] == 1:
-            if _use_pallas(cfg) and jnp.ndim(new_len) == 0:
+            # The decode kernel takes scalar or per-slot [B] cache lengths,
+            # so the ragged continuous-batching path is covered too.
+            if _use_pallas(cfg):
                 from ..kernels.decode_attention.ops import decode_attention as _dk
 
                 bk = max(1, min(512, kc.shape[1]))

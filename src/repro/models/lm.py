@@ -370,6 +370,14 @@ def loss_fn(params, cfg: ModelConfig, batch) -> tuple[jax.Array, dict]:
 # Serving: cache init / prefill / decode
 # ---------------------------------------------------------------------------
 
+# Families whose decode cache is pure position-indexed KV — the ones that
+# support the ragged right-padded prefill and len-rollback contract (see
+# prefill_ragged).  Recurrent caches (ssm/hybrid) and frontend-fed families
+# (vlm/encdec) are excluded; every consumer of the contract
+# (CachedModelEvaluator, ServingEngine.add_requests, SearchService's
+# evaluator default) tests against this one set.
+KV_CACHE_FAMILIES = ("dense", "moe")
+
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> Pytree:
     """Allocate the decode cache (KV / SSM state / enc-dec cross-KV)."""
@@ -413,8 +421,15 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int) -> Pytree:
     raise ValueError(cfg.family)
 
 
-def _step_with_cache(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, Pytree]:
-    """Shared prefill/decode path: runs S tokens against the cache."""
+def _step_with_cache(
+    params, cfg: ModelConfig, batch, cache, last_positions=None
+) -> tuple[jax.Array, Pytree]:
+    """Shared prefill/decode path: runs S tokens against the cache.
+
+    ``last_positions`` (``i32[B]``, ragged prefill) gathers the final hidden
+    state at each row's own last valid position *before* the unembed, so the
+    logits slab stays ``[B, 1, V]`` instead of ``[B, S, V]``.
+    """
     x, positions = _embed_inputs(params, cfg, batch)
     cur_len = cache["len"]
     positions = positions + (
@@ -530,7 +545,10 @@ def _step_with_cache(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array,
         raise ValueError(cfg.family)
 
     x = rms_norm(x, params["final_norm"], cfg.rms_eps)
-    if prefill_mode and cfg.prefill_logits_last_only:
+    if prefill_mode and last_positions is not None:
+        idx = jnp.reshape(jnp.asarray(last_positions, jnp.int32), (-1, 1, 1))
+        x = jnp.take_along_axis(x, idx, axis=1)
+    elif prefill_mode and cfg.prefill_logits_last_only:
         x = x[:, -1:, :]
     head = params.get("lm_head", None)
     logits = x @ head if head is not None else x @ params["embed"].T
@@ -555,8 +573,47 @@ def prefill(params, cfg: ModelConfig, batch, cache) -> tuple[jax.Array, Pytree]:
     return logits[:, -1, :], cache
 
 
+def prefill_ragged(
+    params, cfg: ModelConfig, tokens, lengths, cache
+) -> tuple[jax.Array, Pytree]:
+    """Batched ragged prefill: right-padded prompts, per-slot lengths.
+
+    ``tokens`` is ``[B, S]`` with row ``b`` valid up to ``lengths[b]``; one
+    forward fills all ``B`` cache slots and the returned logits ``[B, V]``
+    are taken at each row's *own* last valid position.  The returned cache
+    carries a per-slot ``len`` **vector** — the layout every ragged consumer
+    (``decode_step``, the serving engine, ``CachedModelEvaluator``) shares:
+
+    * KV rows at positions ``< len[b]`` are valid; rows at ``>= len[b]`` are
+      garbage (computed from pad tokens).  That is safe because attention
+      masks ``kv_pos < len`` and every later write lands at position
+      ``len[b]`` *before* ``len[b]`` advances past it — garbage is always
+      overwritten before it becomes visible.
+
+    Recurrent (SSM / hybrid) caches have no per-position validity to hide
+    behind — pad tokens would pollute the state — so only KV-cache families
+    take this path.
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"prefill_ragged supports KV-cache LM families, not {cfg.family!r}"
+        )
+    lengths = jnp.asarray(lengths, jnp.int32)
+    logits, cache = _step_with_cache(
+        params, cfg, {"tokens": tokens}, cache,
+        last_positions=jnp.maximum(lengths - 1, 0),
+    )
+    return logits[:, 0], dict(cache, len=lengths)
+
+
 def decode_step(params, cfg: ModelConfig, token, cache) -> tuple[jax.Array, Pytree]:
-    """One autoregressive step.  token: [B] or [B, 1] → (logits [B, V], cache)."""
+    """One autoregressive step.  token: [B] or [B, 1] → (logits [B, V], cache).
+
+    ``cache["len"]`` may be a scalar (uniform batch) or a per-slot ``[B]``
+    vector (ragged decode: continuous batching, async search slots) — each
+    slot writes and attends at its own position, through the Pallas decode
+    kernel when ``cfg.attn_impl == 'pallas'``.
+    """
     token = token.reshape(token.shape[0], 1)
     logits, cache = _step_with_cache(params, cfg, {"tokens": token}, cache)
     return logits[:, -1, :], cache

@@ -1,10 +1,16 @@
 """Batched serving engine: slot-based continuous batching over decode_step.
 
-The engine owns ``B`` request slots.  Incoming prompts are prefilling into
-free slots (left-padded batch prefill); every tick runs one fused
+The engine owns ``B`` request slots.  Incoming prompts are admitted into
+free slots by ONE right-padded ragged batch prefill (``prefill_ragged`` —
+each slot's cache fills at its own length); every tick runs one fused
 ``decode_step`` for all active slots; finished sequences (EOS / max length)
 free their slot immediately — the serving-side analogue of the WU-UCT
 async-slot scheduler (no slot ever waits for the longest request).
+
+The per-slot cache layout (``len`` vector; rows ``>= len`` garbage until
+overwritten) is the contract shared with
+:class:`repro.core.evaluators.CachedModelEvaluator` — see the README's
+"KV-cache contract" section.
 """
 
 from __future__ import annotations
@@ -16,7 +22,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..models import decode_step, init_cache, prefill
+from ..models import (
+    KV_CACHE_FAMILIES,
+    decode_step,
+    init_cache,
+    prefill,
+    prefill_ragged,
+)
 from ..models.config import ModelConfig
 
 
@@ -41,43 +53,88 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, t, c: decode_step(p, cfg, t, c)
         )
+        # Jitted once per engine (retraces only on new admission-batch
+        # shapes), not once per add_requests call.
+        self._prefill_ragged = jax.jit(
+            lambda p, t, l, c: prefill_ragged(p, cfg, t, l, c)
+        )
+        self._prefill_one = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))
         self._last_tokens = np.zeros(b, np.int32)
 
-    # NOTE: the simple engine prefils one request at a time (slot-local
-    # cache update); a production engine batches prefill — the dry-run's
-    # prefill_32k cell exercises that path.
     def add_request(self, prompt_tokens: list[int]) -> Optional[int]:
-        free = np.flatnonzero(~self.active)
-        if len(free) == 0:
-            return None
-        slot = int(free[0])
-        cfg, sc = self.cfg, self.sc
-        cache1 = init_cache(cfg, 1, sc.max_len)
-        batch = {"tokens": jnp.asarray(prompt_tokens, jnp.int32)[None]}
-        logits, cache1 = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))(
-            self.params, batch, cache1
-        )
-        # splice the slot-local cache into the batch cache
-        def splice(full, one):
-            if full.ndim == 0 or one.ndim == 0:
-                return full
-            # layer-stacked arrays: batch dim is axis 1
-            return full.at[:, slot].set(one[:, 0])
+        return self.add_requests([prompt_tokens])[0]
 
-        self.cache = jax.tree.map(
-            lambda f, o: splice(f, o) if hasattr(f, "ndim") and f.ndim > 1 else f,
-            self.cache,
-            cache1,
-        )
-        tok = int(jnp.argmax(logits[0]))
-        self.active[slot] = True
-        self.lengths[slot] = len(prompt_tokens)
+    def add_requests(
+        self, prompts: list[list[int]]
+    ) -> list[Optional[int]]:
+        """Admit up to ``len(free slots)`` prompts with ONE batched prefill.
+
+        KV-cache families right-pad the prompt batch to the longest prompt
+        and run ``models.prefill_ragged`` — one forward fills every admitted
+        slot's cache at its own length, and one scatter splices the slot
+        block into the engine cache.  Recurrent-cache families (SSM/hybrid)
+        cannot take right-padded ragged prefill (pad tokens would pollute
+        the state), so they keep the per-prompt prefill loop.
+
+        Returns one slot id (or ``None`` once slots ran out) per prompt, in
+        order.
+        """
+        free = np.flatnonzero(~self.active)
+        take = min(len(free), len(prompts))
+        admitted: list[Optional[int]] = [None] * len(prompts)
+        if take == 0:
+            return admitted
+        slots = free[:take].astype(np.int32)
+        cfg, sc = self.cfg, self.sc
+        if cfg.family in KV_CACHE_FAMILIES:
+            lengths = np.asarray([len(p) for p in prompts[:take]], np.int32)
+            max_p = int(lengths.max())
+            toks = np.zeros((take, max_p), np.int32)
+            for i, p in enumerate(prompts[:take]):
+                toks[i, : len(p)] = p
+            logits, cache_n = self._prefill_ragged(
+                self.params, jnp.asarray(toks), jnp.asarray(lengths),
+                init_cache(cfg, take, sc.max_len),
+            )
+            # One scatter splices all admitted slots into the engine cache
+            # (layer-stacked leaves carry the slot axis at position 1).
+            self.cache = jax.tree.map(
+                lambda f, o: (
+                    f.at[:, slots].set(o)
+                    if hasattr(f, "ndim") and f.ndim > 1 else f
+                ),
+                self.cache,
+                cache_n,
+            )
+            first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        else:
+            first = np.zeros(take, np.int32)
+            for i, p in enumerate(prompts[:take]):
+                cache1 = init_cache(cfg, 1, sc.max_len)
+                batch = {"tokens": jnp.asarray(p, jnp.int32)[None]}
+                logits, cache1 = self._prefill_one(self.params, batch, cache1)
+                slot = int(slots[i])
+                self.cache = jax.tree.map(
+                    lambda f, o: (
+                        f.at[:, slot].set(o[:, 0])
+                        if hasattr(f, "ndim") and f.ndim > 1 else f
+                    ),
+                    self.cache,
+                    cache1,
+                )
+                first[i] = int(jnp.argmax(logits[0]))
+        for i in range(take):
+            slot = int(slots[i])
+            tok = int(first[i])
+            self.active[slot] = True
+            self.lengths[slot] = len(prompts[i])
+            self.outputs[slot] = [tok]
+            self._last_tokens[slot] = tok
+            admitted[i] = slot
         # Per-slot cache lengths (vector `len`): each slot decodes at its own
         # position — the continuous-batching requirement.
         self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
-        self.outputs[slot] = [tok]
-        self._last_tokens[slot] = tok
-        return slot
+        return admitted
 
     def step(self, rng: Optional[jax.Array] = None) -> dict[int, int]:
         """One decode tick for all active slots; returns {slot: new_token}."""
@@ -109,13 +166,16 @@ class ServingEngine:
         results: dict[int, list[int]] = {}
         ticks = 0
         while (pending or self.active.any()) and ticks < max_ticks:
-            while pending:
-                req_id, prompt = pending[0]
-                slot = self.add_request(prompt)
-                if slot is None:
-                    break
-                slot_to_req[slot] = req_id
-                pending.pop(0)
+            if pending:
+                # One batched prefill admits every prompt a free slot can take.
+                slots = self.add_requests([p for _, p in pending])
+                n_admitted = 0
+                for (req_id, _), slot in zip(pending, slots):
+                    if slot is None:
+                        break
+                    slot_to_req[slot] = req_id
+                    n_admitted += 1
+                pending = pending[n_admitted:]
             before = self.active.copy()
             self.step()
             ticks += 1

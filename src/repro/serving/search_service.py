@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import SearchSpec, build_searcher
-from ..core.evaluators import Evaluator, ModelEvaluator
+from ..core.evaluators import CachedModelEvaluator, Evaluator, ModelEvaluator
 from ..envs.token_env import TokenEnvState, make_token_env
 from ..models import forward
 from ..models.config import ModelConfig
@@ -30,10 +30,13 @@ class SearchService:
 
     ``spec.batch`` fixes the request-slot count (one compiled program);
     shorter request lists are padded with repeats and the padding results
-    dropped.  ``evaluator=None`` builds a :class:`ModelEvaluator` over the
-    policy/reward models — pass an explicit evaluator (e.g. a
-    ``RolloutEvaluator`` over the token env) to switch evaluation modes
-    without touching the engine.
+    dropped.  ``evaluator=None`` builds the best evaluator the spec
+    supports: a :class:`CachedModelEvaluator` on async engines with a
+    KV-cache model family (every master tick costs one batched
+    ``decode_step``, not one full-prefix forward), falling back to the
+    uncached :class:`ModelEvaluator` otherwise — pass an explicit evaluator
+    (e.g. a ``RolloutEvaluator`` over the token env) to switch evaluation
+    modes without touching the engine.
     """
 
     def __init__(
@@ -64,7 +67,16 @@ class SearchService:
             reward_cfg=reward_cfg, reward_params=reward_params,
         )
         if evaluator is None:
-            evaluator = ModelEvaluator(
+            families = {model_cfg.family} | (
+                {reward_cfg.family} if reward_cfg is not None else set()
+            )
+            from ..models import KV_CACHE_FAMILIES
+
+            cacheable = (
+                spec.engine == "async" and families <= set(KV_CACHE_FAMILIES)
+            )
+            ev_cls = CachedModelEvaluator if cacheable else ModelEvaluator
+            evaluator = ev_cls(
                 model_cfg, params, top_k=top_k, eos_token=eos_token,
                 reward_cfg=reward_cfg, reward_params=reward_params,
             )

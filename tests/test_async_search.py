@@ -3,7 +3,8 @@
 import jax
 import numpy as np
 
-from repro.core import make_config, make_async_searcher
+from repro.core import make_config
+from repro.core.async_search import make_async_searcher
 from repro.envs import make_bandit_tree, make_tap_game
 from repro.envs.bandit_tree import solve_bandit_tree
 
@@ -62,7 +63,7 @@ def test_async_matches_wave_engine_quality():
     concentrate: measured total-variation distance is ≤ 0.10 across seed
     bases (tolerance 0.25), and each engine puts ≥ 0.64 of its visit mass
     on the optimal action (threshold 0.4)."""
-    from repro.core import make_searcher
+    from repro.core.wu_uct import make_searcher
 
     env = make_bandit_tree(depth=4, num_actions=4, seed=0)
     _, opt_a, _ = solve_bandit_tree(4, 4, 0, gamma=1.0)

@@ -14,12 +14,9 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import (
-    PolicyConfig,
-    SearchConfig,
-    run_async_search,
-    run_async_search_batched,
-)
+from repro.core import PolicyConfig, SearchConfig
+from repro.core.async_search import run_async_search
+from repro.core.batched_async_search import run_async_search_batched
 from repro.envs import make_bandit_tree
 
 

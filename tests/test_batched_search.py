@@ -21,9 +21,9 @@ from repro.core import (
     SearchConfig,
     init_tree,
     make_config,
-    run_search,
-    run_search_batched,
 )
+from repro.core.batched_search import run_search_batched
+from repro.core.wu_uct import run_search
 from repro.core import tree as tree_lib
 from repro.core import batched_tree as btree_lib
 from repro.core.policies import child_scores
@@ -249,7 +249,7 @@ def test_search_result_reports_no_overflow_and_ticks():
 
 
 def test_rootp_ensemble_merges_committee_stats():
-    from repro.core import run_rootp
+    from repro.core.baselines import run_rootp
 
     env = make_bandit_tree(depth=4, num_actions=4, seed=0)
     cfg = make_config(

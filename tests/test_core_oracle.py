@@ -10,7 +10,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import SearchConfig, PolicyConfig, run_search
+from repro.core import SearchConfig, PolicyConfig
+from repro.core.wu_uct import run_search
 from repro.core.ref_mcts import RefMCTS
 from repro.envs import make_bandit_tree
 

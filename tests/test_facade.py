@@ -5,14 +5,14 @@ Three claim families:
 * ``build_searcher(env, spec)`` reproduces the direct engine entry points
   *bit-exactly* for every ``(engine, batch, algo)`` cell — the facade is
   pure dispatch, never a different search;
-* the deprecated shims in ``repro.core`` still work and warn;
+* the deprecated pre-facade shims are gone from ``repro.core`` (their
+  one-release grace period ended) while the engine modules stay importable;
 * ``ModelEvaluator`` issues exactly ONE batched model forward per master
   tick on the async engines (counted with a traced callback), while
   reproducing the token environment's transition semantics.
 """
 
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -191,21 +191,18 @@ def test_make_config_reexpressed_over_spec():
     assert cfg.policy.kind == "uct" and cfg.stat_mode == "none"
 
 
-def test_deprecated_shims_warn_and_work(env):
-    spec = _spec(algo="wu_uct")
-    cfg = as_search_config(spec)
-    key = jax.random.PRNGKey(5)
-    root = env.init(key)
-    golden = build_searcher(env, spec)(root, key)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        res = core.run_search(env, cfg, root, key)
-        searcher = core.make_searcher(env, cfg)
-    assert sum(
-        issubclass(w.category, DeprecationWarning) for w in rec
-    ) >= 2
-    _assert_results_equal(res, golden, "deprecated run_search")
-    _assert_results_equal(searcher(root, key), golden, "deprecated make_searcher")
+def test_deprecated_shims_are_gone():
+    """The pre-facade entry points finished their one-release deprecation
+    window: `repro.core` no longer re-exports them (the engine modules keep
+    the real functions for oracles/tests)."""
+    for name in (
+        "run_search", "run_search_batched", "run_async_search",
+        "run_async_search_batched", "run_leafp", "run_treep", "run_rootp",
+        "make_searcher", "make_async_searcher", "make_batched_searcher",
+        "make_batched_async_searcher", "make_algorithm",
+    ):
+        assert not hasattr(core, name), f"shim {name} should be removed"
+        assert name not in core.__all__
 
 
 def test_make_algorithm_still_dispatches(env):
@@ -313,7 +310,7 @@ def test_model_evaluator_matches_token_env_transitions():
     keys = jax.random.split(jax.random.PRNGKey(1), n)
     scfg = SearchSpec(gamma=1.0, max_sim_steps=4).config
 
-    new_state, r, done, acc, disc, steps, rdone = ev.tick(
+    (new_state, r, done, acc, disc, steps, rdone), _ = ev.tick(
         scfg, kind, act, state,
         jnp.zeros((n,), jnp.bool_), jnp.zeros((n,), jnp.float32),
         jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.int32), keys,

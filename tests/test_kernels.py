@@ -82,6 +82,23 @@ def test_decode_attention_matches_ref(shape, dtype):
     )
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_ragged_kv_len_matches_ref(dtype):
+    """Per-batch [B] cache lengths (continuous batching / async slot caches)
+    run through the same kernel as the scalar path."""
+    b, s, hq, hkv, d, bk = 4, 256, 8, 2, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(42), 3)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    lens = jnp.asarray([1, 63, 200, 256], jnp.int32)
+    out = decode_attention(q, kc, vc, lens, block_k=bk)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
 # ---------------------------------------------------------------------------
 # ssd_scan — validated against BOTH the chunked jnp oracle and the O(S)
 # sequential recurrence (ground truth).

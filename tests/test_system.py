@@ -15,7 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import make_algorithm, make_config
+from repro.core import make_config
+from repro.core.baselines import make_algorithm
 from repro.envs import make_bandit_tree, make_tap_game
 from repro.envs.bandit_tree import solve_bandit_tree
 
@@ -136,6 +137,38 @@ def test_serving_engine_matches_naive_generation():
             if t == 1:
                 break
         assert naive == out[: len(naive)], (naive, out)
+
+
+def test_serving_engine_batched_admission_matches_sequential():
+    """Multi-prompt admission (one ragged batched prefill + one cache
+    splice) must agree with admitting the same prompts one at a time."""
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.serving import ServeConfig, ServingEngine
+
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    sc = ServeConfig(batch_slots=4, max_len=32, eos_token=1)
+    rng = np.random.default_rng(1)
+    # Ragged prompt lengths exercise the right-padded prefill.
+    prompts = [list(rng.integers(2, cfg.vocab_size, size=n)) for n in (4, 9, 6)]
+
+    batched = ServingEngine(cfg, params, sc)
+    slots_b = batched.add_requests(prompts)
+    assert slots_b == [0, 1, 2]
+
+    seq = ServingEngine(cfg, params, sc)
+    slots_s = [seq.add_request(p) for p in prompts]
+    assert slots_s == [0, 1, 2]
+
+    assert [o[:] for o in batched.outputs] == [o[:] for o in seq.outputs]
+    for _ in range(4):
+        batched.step()
+        seq.step()
+    assert [o[:] for o in batched.outputs] == [o[:] for o in seq.outputs]
+    # One more prompt than free slots: the overflow request waits.
+    slots = batched.add_requests([prompts[0], prompts[1]])
+    assert slots[0] == 3 and slots[1] is None
 
 
 def test_tap_game_episode_completes_with_search():

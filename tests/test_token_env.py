@@ -12,7 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_reduced
-from repro.core import make_config, make_searcher
+from repro.core import make_config
+from repro.core.wu_uct import make_searcher
 from repro.envs.token_env import make_token_env
 from repro.models import forward, init_params
 
