@@ -6,15 +6,26 @@ Two claims under test:
   in-flight slots with **one** batched full-prefix forward — vs the default
   rollout evaluation whose per-slot ``env.policy`` + ``env.step`` lower to
   three forwards per slot step.
-* ``CachedModelEvaluator`` (this PR): that one forward becomes a single
+* ``CachedModelEvaluator`` (PR 5): that one forward becomes a single
   batched ``decode_step`` against per-slot KV caches carried in the slot
   state — O(1) in prefix length instead of O(depth).  The ``--depth`` sweep
   makes the asymptotics visible: prefill-per-tick cost grows with
   ``max_depth`` (longer prefixes per forward) while the cached per-tick cost
-  stays flat, so the speedup widens with depth.
+  stays flat, so the speedup widens with depth.  (The early ``d8_B4``
+  regression — cached slower than prefill at shallow depth — was refill
+  catch-up dispatch: one ``decode_step`` launch per divergent token.  The
+  chunked catch-up, one launch per ``refill_chunk`` tokens, removed it.)
+* ``PagedCachedModelEvaluator`` (this PR): the dense ``[B·W, max_len]``
+  slot caches become a shared block pool + page tables.  Per-tick cost must
+  stay flat vs the dense cached rows, and the trace-mode
+  ``blocks_in_use`` peak shows the real working set: sibling slots share
+  prefix pages (copy-on-write), so the same HBM budget admits strictly more
+  slots — the ``paged_ceiling`` rows derive that batch ceiling.
 
-Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` with derived
-searches/sec and per-tick µs, ``cached_speedup_d{d}_B{n}``, plus the PR-4
+Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` /
+``paged_eval_d{d}_B{n}`` with derived searches/sec and per-tick µs,
+``cached_speedup_d{d}_B{n}``, ``paged_ceiling_d{d}_B{n}`` (peak pool blocks
+→ max B·W at the dense layout's HBM budget), plus the PR-4
 ``rollout_eval`` baseline at the first depth.  Forward/decode counting is
 asserted in ``tests/test_facade.py`` / ``tests/test_cached_evaluator.py``;
 this file measures the wall-clock consequence.  ``benchmarks/run.py`` dumps
@@ -29,21 +40,27 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+import functools
+
+import numpy as np
+
 from repro.configs import get_reduced
 from repro.core import (
     CachedModelEvaluator,
     ModelEvaluator,
+    PagedCachedModelEvaluator,
     SearchSpec,
     build_searcher,
 )
 from repro.envs.token_env import make_token_env
-from repro.models import init_params
+from repro.models import init_params, num_pages
 
 from .common import row, time_fn
 
 BATCH_SIZES = (1, 4)
 DEPTHS = (8, 64)
 PROMPT = (3, 5, 7)
+BLOCK_SIZE = 8
 
 
 def _tiny_lm(vocab: int = 64):
@@ -60,6 +77,7 @@ def run(
     batch_sizes: tuple[int, ...] = BATCH_SIZES,
     top_k: int = 4,
     depths: tuple[int, ...] = DEPTHS,
+    paged: bool = True,
     records: list | None = None,
 ) -> list[str]:
     cfg, params = _tiny_lm()
@@ -106,9 +124,12 @@ def run(
             def bench(search):
                 # The first (warmup) call also yields the evaluator's own
                 # tick count — different evaluators sample different tokens
-                # and so tick different numbers of times.
+                # and so tick different numbers of times.  Shallow-depth
+                # searches finish in single-digit ms, where 3-iteration
+                # medians were noisy enough to flip speedup rows across
+                # runs — 7 iterations keeps the row stable.
                 ticks = int(jnp.max(jnp.atleast_1d(search(roots, rngs).ticks)))
-                return time_fn(search, roots, rngs, warmup=0, iters=3), ticks
+                return time_fn(search, roots, rngs, warmup=0, iters=7), ticks
 
             prefill_search = build_searcher(env, bspec, evaluator=model_ev)
             cached_search = build_searcher(env, bspec, evaluator=cached_ev)
@@ -130,6 +151,62 @@ def run(
                     f"{t_p / t_c:.2f}x vs prefill-per-tick")
             )
 
+            if paged:
+                slots = max(B, 1) * wave_size
+                # Dense-equivalent pool for the timing row: same HBM as the
+                # dense slot caches, so any speed delta is pure layout cost.
+                nb = slots * num_pages(max_len, BLOCK_SIZE)
+                paged_ev = PagedCachedModelEvaluator(
+                    cfg, params, top_k=top_k, eos_token=1,
+                    block_size=BLOCK_SIZE, num_blocks=nb,
+                )
+                t_g, ticks_g = bench(
+                    build_searcher(env, bspec, evaluator=paged_ev)
+                )
+                record(f"paged_eval_d{depth}_B{B}", t_g, B, depth, ticks_g,
+                       "paged_decode")
+
+                # Batch ceiling: the trace-mode blocks_in_use peak is the
+                # real paged working set (prefix pages shared COW between
+                # siblings + no dead [max_len] tails), so at the HBM budget
+                # the dense layout spends on `slots` slots the pool can
+                # carry `slots * dense/paged` of them.
+                from repro.core.async_search import run_async_search
+                from repro.core.batched_async_search import (
+                    run_async_search_batched,
+                )
+
+                engine = (
+                    run_async_search_batched if B > 1 else run_async_search
+                )
+                fn = jax.jit(functools.partial(
+                    engine, env, bspec.config,
+                    trace_ticks=4 * num_simulations, evaluator=paged_ev,
+                ))
+                _, trace = fn(roots, rngs)
+                alive = np.asarray(trace.alive)
+                alive = alive.reshape(alive.shape[0], -1).any(axis=1)
+                peak = int(np.asarray(trace.blocks_in_use)[alive].max())
+                dense_pos = slots * max_len
+                paged_pos = peak * BLOCK_SIZE
+                max_slots = slots * dense_pos // max(paged_pos, 1)
+                if records is not None:
+                    records.append({
+                        "name": f"paged_ceiling_d{depth}_B{B}",
+                        "kind": "batch_ceiling", "batch": B, "depth": depth,
+                        "slots": slots, "max_len": max_len,
+                        "block_size": BLOCK_SIZE, "peak_blocks": peak,
+                        "dense_kv_positions": dense_pos,
+                        "paged_kv_positions": paged_pos,
+                        "max_slots_at_budget": max_slots,
+                        "ceiling_ratio": dense_pos / max(paged_pos, 1),
+                    })
+                rows.append(row(
+                    f"paged_ceiling_d{depth}_B{B}", 0.0,
+                    f"{peak} blocks peak; {max_slots} slots fit the "
+                    f"dense budget ({slots} dense)",
+                ))
+
             if di == 0:
                 t_r, ticks_r = bench(build_searcher(env, bspec))
                 record(f"rollout_eval_d{depth}_B{B}", t_r, B, depth, ticks_r,
@@ -146,12 +223,18 @@ def main() -> None:
     )
     ap.add_argument("--batch", type=int, nargs="*", default=list(BATCH_SIZES))
     ap.add_argument("--num-simulations", type=int, default=16)
+    ap.add_argument(
+        "--paged", dest="paged", action="store_true", default=True,
+        help="include paged-evaluator timing + batch-ceiling rows (default)",
+    )
+    ap.add_argument("--no-paged", dest="paged", action="store_false")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for r in run(
         num_simulations=args.num_simulations,
         batch_sizes=tuple(args.batch),
         depths=tuple(args.depth),
+        paged=args.paged,
     ):
         print(r)
 

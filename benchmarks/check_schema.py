@@ -1,0 +1,70 @@
+"""Schema guard for committed perf baselines (CI benchmark-smoke).
+
+Wall-clock numbers drift with hardware, so CI cannot diff them — but the
+*shape* of a baseline is load-bearing: later PRs join rows by ``kind`` and
+read specific fields, and a silently renamed kind or dropped field turns
+every downstream comparison into a no-op.  This checker compares a freshly
+generated ``BENCH_<module>.json`` (typically from ``run.py --fast``)
+against the committed baseline and fails on:
+
+* kinds present in the baseline but missing from the fresh run (a bench
+  path stopped producing them);
+* per-kind field sets that no longer cover the baseline's fields.
+
+Fresh runs may ADD kinds/fields (that is how baselines grow); they may not
+lose any.  Usage::
+
+    python -m benchmarks.check_schema --baseline BENCH_model_eval.json \
+        --fresh /tmp/bench/BENCH_model_eval.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def field_sets(rows: list[dict]) -> dict[str, set[str]]:
+    """kind -> union of field names over that kind's rows."""
+    out: dict[str, set[str]] = {}
+    for r in rows:
+        out.setdefault(r.get("kind", "?"), set()).update(r.keys())
+    return out
+
+
+def check(baseline: dict, fresh: dict) -> list[str]:
+    errors = []
+    base, new = field_sets(baseline["rows"]), field_sets(fresh["rows"])
+    for kind, fields in sorted(base.items()):
+        if kind not in new:
+            errors.append(f"kind {kind!r} missing from fresh run")
+            continue
+        lost = fields - new[kind]
+        if lost:
+            errors.append(f"kind {kind!r} lost fields {sorted(lost)}")
+    if not fresh["rows"]:
+        errors.append("fresh run produced no rows")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--fresh", required=True)
+    args = ap.parse_args()
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errors = check(baseline, fresh)
+    for e in errors:
+        print(f"SCHEMA DRIFT: {e}", file=sys.stderr)
+    if errors:
+        sys.exit(1)
+    kinds = sorted(field_sets(fresh["rows"]))
+    print(f"schema ok: {len(fresh['rows'])} rows, kinds {kinds}")
+
+
+if __name__ == "__main__":
+    main()

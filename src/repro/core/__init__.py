@@ -20,6 +20,7 @@ from .evaluators import (
     CachedModelEvaluator,
     Evaluator,
     ModelEvaluator,
+    PagedCachedModelEvaluator,
     RolloutEvaluator,
 )
 from .policies import PolicyConfig
@@ -39,6 +40,7 @@ __all__ = [
     "RolloutEvaluator",
     "ModelEvaluator",
     "CachedModelEvaluator",
+    "PagedCachedModelEvaluator",
     # configs / results / trees
     "AsyncTickTrace",
     "PolicyConfig",

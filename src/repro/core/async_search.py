@@ -55,9 +55,10 @@ class AsyncTickTrace(NamedTuple):
     alive: jax.Array     # bool[K]
     state_len: Optional[jax.Array] = None  # i32[K, W] slot token prefix length
     cache_len: Optional[jax.Array] = None  # i32[K, W] evaluator cache depth
+    blocks_in_use: Optional[jax.Array] = None  # i32[K] paged-pool working set
 
 
-def tick_snapshot(carry, alive, cache_len=None) -> AsyncTickTrace:
+def tick_snapshot(carry, alive, cache_len=None, blocks=None) -> AsyncTickTrace:
     """One :class:`AsyncTickTrace` row from a master-loop carry.
 
     Both async engines carry ``(tree, slots, rng, t_launch, t_done, ...)``,
@@ -72,6 +73,7 @@ def tick_snapshot(carry, alive, cache_len=None) -> AsyncTickTrace:
         sim_node=slots.sim_node, t_done=carry[4], alive=alive,
         state_len=getattr(slots.state, "length", None),
         cache_len=cache_len,
+        blocks_in_use=blocks,
     )
 
 
@@ -310,7 +312,10 @@ def run_async_search(
             new = jax.tree.map(
                 lambda a, b: jnp.where(alive, a, b), master_iter(carry), carry
             )
-            return new, tick_snapshot(new, alive, evaluator.aux_len(new[7]))
+            return new, tick_snapshot(
+                new, alive, evaluator.aux_len(new[7]),
+                evaluator.aux_blocks(new[7]),
+            )
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
         tree, slots, _, _, _, ticks, max_o, _ = final

@@ -299,9 +299,25 @@ def run_async_search_batched(
         with ``[B]`` (model caches lead with the layer axis), and a finished
         tree's cache drift is unobservable — its slots are frozen, so
         nothing it decodes ever reaches the tree again.
+
+        Finished trees' slot kinds are masked to FREE for the iteration so
+        their dead slots stop FEEDING the evaluator: with a dense cache the
+        drift was merely unobservable waste, but with a shared paged pool a
+        dead tree's slots would keep allocating copy-on-write blocks every
+        tick and starve the live trees.  Tree-side writes were already
+        masked (``want`` is false once ``t_launch >= T``), slot outputs are
+        frozen from ``carry``, and the RNG split structure is untouched, so
+        the vmap-oracle bit-equivalence is preserved.
         """
-        new = master_iter(carry)
-        return _freeze_done(cond(carry), new[:-1], carry[:-1]) + (new[-1],)
+        alive = cond(carry)
+        slots_in = carry[1]
+        masked = slots_in._replace(
+            kind=jnp.where(alive[:, None], slots_in.kind, FREE).astype(
+                jnp.int32
+            )
+        )
+        new = master_iter((carry[0], masked) + carry[2:])
+        return _freeze_done(alive, new[:-1], carry[:-1]) + (new[-1],)
 
     init = (
         tree0, slot_state0(), rngs,
@@ -316,7 +332,9 @@ def run_async_search_batched(
             ev_len = evaluator.aux_len(new[7])
             if ev_len is not None:
                 ev_len = ev_len.reshape(B, W)
-            return new, tick_snapshot(new, alive, ev_len)
+            return new, tick_snapshot(
+                new, alive, ev_len, evaluator.aux_blocks(new[7])
+            )
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
         tree, slots, _, _, _, ticks, max_o, _ = final

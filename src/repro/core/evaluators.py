@@ -128,6 +128,12 @@ class Evaluator:
         del aux
         return None
 
+    def aux_blocks(self, aux) -> Optional[jax.Array]:
+        """Pool blocks currently allocated (paged caches only) — trace-mode
+        snapshots it so benchmarks can read the peak working set."""
+        del aux
+        return None
+
     def init_state(self, example_state: Pytree, prefix: tuple) -> Pytree:
         """Zeroed per-slot state buffers shaped ``prefix + leaf.shape``."""
         return jax.tree.map(
@@ -449,6 +455,8 @@ class CachedModelEvaluator(ModelEvaluator):
         value_fn: Optional[Callable] = None,
         decode_fn: Optional[Callable] = None,
         prefill_fn: Optional[Callable] = None,
+        chunk_fn: Optional[Callable] = None,
+        refill_chunk: int = 8,
     ):
         super().__init__(
             model_cfg, params, top_k=top_k, eos_token=eos_token,
@@ -459,8 +467,14 @@ class CachedModelEvaluator(ModelEvaluator):
             from ..models import decode_step as decode_fn  # circular-safe
         if prefill_fn is None:
             from ..models import prefill_ragged as prefill_fn
+        if chunk_fn is None:
+            from ..models import decode_chunk as chunk_fn
+        if refill_chunk < 1:
+            raise ValueError(f"refill_chunk must be >= 1, got {refill_chunk}")
         self.decode_fn = decode_fn
         self.prefill_fn = prefill_fn
+        self.chunk_fn = chunk_fn
+        self.refill_chunk = refill_chunk
         from ..models import KV_CACHE_FAMILIES
 
         cfgs = [model_cfg] + ([self.reward_cfg] if reward_params is not None
@@ -589,40 +603,82 @@ class CachedModelEvaluator(ModelEvaluator):
             aux[key] = {"cache": cache, "logits": logits}
         return aux
 
+    def _rollback_targets(self, sub, new_state, mask):
+        """Per-row (start, target, tokens) for a refill rollback.
+
+        ``start`` is the common prefix of the cached tokens and the new
+        path's tokens, capped so the final prompt token is always re-decoded
+        (the stored logits must be the NEW position's logits); the
+        re-prefill fallback is the common == 0 degenerate.  Unmasked rows
+        collapse to start == target == their current length (no-op).
+        """
+        s_max = sub["tokens"].shape[-1]
+        pos = jnp.arange(s_max)
+        l_new = jnp.asarray(new_state.length, jnp.int32)
+        old_len = sub["len"]
+        limit = jnp.minimum(old_len, l_new)
+        neq = (sub["tokens"] != new_state.tokens) & (pos[None, :] < limit[:, None])
+        first = jnp.min(jnp.where(neq, pos[None, :], s_max), axis=1)
+        common = jnp.minimum(first, limit)
+        start = jnp.minimum(common, jnp.maximum(l_new - 1, 0))
+        start = jnp.where(mask, start, old_len)
+        target = jnp.where(mask, l_new, old_len)
+        tokens = jnp.where(mask[:, None], new_state.tokens, sub["tokens"])
+        return start, target, tokens
+
     def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
         del cfg
         sub = self._take_rows(aux, rows)
         r = rows.shape[0]
         s_max = sub["tokens"].shape[-1]
-        pos = jnp.arange(s_max)
-        l_new = jnp.asarray(new_state.length, jnp.int32)
-        old_len = sub["len"]
-
-        # Common prefix of the tokens already in the cache and the new
-        # path's tokens (the re-prefill fallback is the c == 0 degenerate).
-        limit = jnp.minimum(old_len, l_new)
-        neq = (sub["tokens"] != new_state.tokens) & (pos[None, :] < limit[:, None])
-        first = jnp.min(jnp.where(neq, pos[None, :], s_max), axis=1)
-        common = jnp.minimum(first, limit)
-        # Re-decode at least the final prompt token: the stored logits must
-        # be the logits at the NEW position L-1.
-        start = jnp.minimum(common, jnp.maximum(l_new - 1, 0))
-
-        start = jnp.where(mask, start, old_len)
-        target = jnp.where(mask, l_new, old_len)
-        tokens = jnp.where(mask[:, None], new_state.tokens, sub["tokens"])
+        start, target, tokens = self._rollback_targets(sub, new_state, mask)
         sub = dict(sub, tokens=tokens, len=start)
+        sub = self._catch_up(sub, target, r, s_max)
+        return self._put_rows(aux, rows, sub)
+
+    def _catch_up(self, sub, target, r, s_max):
+        """Re-decode each row's divergent suffix in batched ragged chunks.
+
+        One ``models.decode_chunk`` dispatch advances every behind row by up
+        to ``refill_chunk`` tokens at its own offset — ``ceil(suffix / C)``
+        model calls per refill instead of ``suffix`` single-token decode
+        steps (the while_loop of decode_steps this replaces dominated
+        shallow-depth ticks; see BENCH_model_eval.json's d8 rows).
+        """
+        c_sz = min(self.refill_chunk, s_max)
+        del r
 
         def cond(c):
             return jnp.any(c["len"] < target)
 
         def body(c):
-            feed = c["len"] < target
-            tok = c["tokens"][jnp.arange(r), jnp.minimum(c["len"], s_max - 1)]
-            return self._advance(c, tok, feed)
+            base = c["len"]
+            behind = base < target
+            gpos = jnp.minimum(
+                base[:, None] + jnp.arange(c_sz)[None, :], s_max - 1
+            )
+            toks = jnp.take_along_axis(c["tokens"], gpos, axis=1)
+            out = dict(c, pol=(), rew=())
+            new_len = base
+            for key, params, cfg in self._branches():
+                b = c[key]
+                logits, cache = self.chunk_fn(
+                    params, cfg, toks, target, dict(b["cache"], len=base)
+                )
+                new_len = cache.pop("len")
+                # Rows that finish inside this chunk got their final-position
+                # logits from the gather; later chunks never touch them.
+                fin = behind & (new_len >= target)
+                out[key] = {
+                    "cache": cache,
+                    "logits": jnp.where(
+                        fin[:, None], logits, b["logits"]
+                    ).astype(b["logits"].dtype),
+                }
+            out["len"] = new_len
+            return out
 
-        sub = jax.lax.while_loop(cond, body, sub)
-        return self._put_rows(aux, rows, sub)
+        return jax.lax.while_loop(cond, body, sub)
 
     def aux_len(self, aux) -> Optional[jax.Array]:
         return aux["len"]
@@ -645,3 +701,334 @@ class CachedModelEvaluator(ModelEvaluator):
         # Exactly the slots whose env state appended a token this tick.
         fed = (kind != FREE) & jnp.logical_not(state.done)
         return out, self._advance(aux, token, fed)
+
+
+# ---------------------------------------------------------------------------
+# PagedCachedModelEvaluator — shared block pool + per-slot page tables.
+# ---------------------------------------------------------------------------
+
+
+class PagedCachedModelEvaluator(CachedModelEvaluator):
+    """:class:`CachedModelEvaluator` over a paged (block-sparse) KV layout.
+
+    Dense slot caches give every in-flight slot a private ``[max_len]`` KV
+    row — ``B·W`` slots cost ``B·W·max_len`` rows of HBM even though sibling
+    slots share their root prompt (and, after refills, long tree prefixes)
+    by construction.  This evaluator stores K/V in a shared block pool
+    (:func:`repro.models.init_paged_cache`) and addresses it through
+    per-slot page tables, so shared prefixes are stored ONCE:
+
+    * :meth:`init_aux` prefills each distinct root prompt once (one ragged
+      batched forward over the ``B`` roots, not ``B·W`` slots), scatters the
+      dense rows into pool pages, and points all ``W`` sibling slots' tables
+      at the same pages (refcount ``W``);
+    * decode writes copy-on-write: a slot about to write into a block with
+      ``refcount > 1`` first copies it to a freshly allocated private block
+      (one drop-mode gather/scatter over the pool), so siblings never see
+      each other's divergent suffixes;
+    * :meth:`refill_aux` rollback is a page-table edit — suffix pages are
+      refcount-decremented back into the free pool
+      (:func:`repro.models.release_pages`) and only the divergent suffix
+      re-decodes.
+
+    Attention runs through ``models.paged_decode_step`` →
+    ``paged_decode_attention`` (the page-table Pallas kernel on TPU, its
+    gather-based jnp oracle elsewhere).  Pool exhaustion inside jitted code
+    latches the aux ``oom`` counter; :meth:`check_exhausted` (and eager
+    ``init_aux``) surface it as
+    :class:`repro.models.PagePoolExhaustedError`.
+
+    Aux layout (flat slot axis ``N``; pool leaves are global):
+
+    * ``tokens i32[N, S]`` / ``len i32[N]`` — as the dense evaluator;
+    * ``table i32[N, max_pages]`` — pool block id per logical page; entries
+      at page indices ``>= ceil(len/block_size)`` are garbage;
+    * ``refcount i32[P]`` / ``oom i32[]`` — shared across branches (policy
+      and reward models see the same token stream, so one table/refcount
+      serves both; each branch owns its own pools);
+    * ``pol/rew`` — ``{"k": [L, P, bs, Hkv, D], "v": ..., "logits": [N, V]}``.
+    """
+
+    def __init__(
+        self,
+        model_cfg,
+        params,
+        *,
+        top_k: int,
+        block_size: int,
+        num_blocks: int,
+        eos_token: int = 0,
+        reward_cfg=None,
+        reward_params=None,
+        value_fn: Optional[Callable] = None,
+        prefill_fn: Optional[Callable] = None,
+        paged_decode_fn: Optional[Callable] = None,
+    ):
+        super().__init__(
+            model_cfg, params, top_k=top_k, eos_token=eos_token,
+            reward_cfg=reward_cfg, reward_params=reward_params,
+            value_fn=value_fn, prefill_fn=prefill_fn,
+        )
+        if paged_decode_fn is None:
+            from ..models import paged_decode_step as paged_decode_fn
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if num_blocks < 1:
+            raise ValueError(f"num_blocks must be >= 1, got {num_blocks}")
+        self.block_size = block_size
+        self.num_blocks = num_blocks
+        self.paged_decode_fn = paged_decode_fn
+
+    def _maybe_raise(self, oom) -> None:
+        """Surface a latched pool-exhaustion counter at an eager boundary."""
+        from ..models import PagePoolExhaustedError
+
+        try:
+            n = int(oom)
+        except (
+            TypeError,
+            jax.errors.ConcretizationTypeError,
+            jax.errors.TracerArrayConversionError,
+        ):
+            return
+        if n:
+            raise PagePoolExhaustedError(
+                f"KV block pool exhausted: {n} page allocation(s) failed "
+                f"(num_blocks={self.num_blocks}, "
+                f"block_size={self.block_size}); grow num_blocks or reduce "
+                "concurrent slots"
+            )
+
+    def check_exhausted(self, aux) -> None:
+        """Raise :class:`PagePoolExhaustedError` if any jitted allocation
+        failed since ``init_aux`` (call after a search settles)."""
+        self._maybe_raise(aux["oom"])
+
+    # -- aux structure helpers ---------------------------------------------
+
+    def _take_rows(self, aux, rows):
+        def branch(b):
+            if b == ():
+                return ()
+            return {"k": b["k"], "v": b["v"], "logits": b["logits"][rows]}
+
+        return {
+            "tokens": aux["tokens"][rows],
+            "len": aux["len"][rows],
+            "table": aux["table"][rows],
+            "refcount": aux["refcount"],
+            "oom": aux["oom"],
+            "pol": branch(aux["pol"]),
+            "rew": branch(aux["rew"]),
+        }
+
+    def _put_rows(self, aux, rows, sub):
+        def branch(b, sb):
+            if b == ():
+                return ()
+            return {
+                "k": sb["k"], "v": sb["v"],
+                "logits": b["logits"].at[rows].set(sb["logits"]),
+            }
+
+        return {
+            "tokens": aux["tokens"].at[rows].set(sub["tokens"]),
+            "len": aux["len"].at[rows].set(sub["len"]),
+            "table": aux["table"].at[rows].set(sub["table"]),
+            "refcount": sub["refcount"],
+            "oom": sub["oom"],
+            "pol": branch(aux["pol"], sub["pol"]),
+            "rew": branch(aux["rew"], sub["rew"]),
+        }
+
+    def _advance(self, aux, token, fed):
+        """Feed one token per slot: COW resolution → allocation → one batched
+        ``paged_decode_step`` per model.
+
+        Page bookkeeping per fed slot writing at position ``len``:
+
+        * ``off == 0`` — the slot is entering a fresh logical page: allocate
+          a block and point the table at it;
+        * ``off > 0`` and the current block is shared (``refcount > 1``) —
+          copy-on-write: allocate, copy the block, decref the shared one;
+        * otherwise the slot owns the block exclusively and writes in place.
+
+        Non-fed slots never write (sentinel target, drop-mode scatter) and
+        attend only their existing ``len`` positions, so a masked slot can
+        never corrupt a page — shared or not.  Allocation failure latches
+        ``oom`` and skips the write.
+        """
+        from ..models import alloc_blocks
+
+        idx = jnp.arange(token.shape[0])
+        s_max = aux["tokens"].shape[-1]
+        bs = self.block_size
+        length = aux["len"]
+        safe = jnp.minimum(length, s_max - 1)
+        prev = aux["tokens"][idx, safe]
+        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
+
+        table, refcount, oom = aux["table"], aux["refcount"], aux["oom"]
+        p = refcount.shape[0]
+        bi = safe // bs
+        off = safe % bs
+        cur = table[idx, bi]
+        cur_c = jnp.clip(cur, 0, p - 1)
+        started = off > 0               # page already holds this slot's rows
+        shared = refcount[cur_c] > 1
+        need_new = fed & (~started | shared)
+        is_cow = fed & started & shared
+        blocks, refcount, n_fail = alloc_blocks(refcount, need_new)
+        got = need_new & (blocks < p)
+        oom = oom + n_fail
+        refcount = refcount.at[
+            jnp.where(is_cow & got, cur_c, p)
+        ].add(-1, mode="drop")
+        table = table.at[idx, bi].set(jnp.where(got, blocks, cur))
+        ok = fed & jnp.where(need_new, got, True)
+        wb = jnp.where(ok, jnp.clip(table[idx, bi], 0, p - 1), p)
+        att_len = length + jnp.where(ok, 1, 0)
+
+        copy_src = jnp.where(is_cow & got, cur_c, 0)
+        copy_dst = jnp.where(is_cow & got, blocks, p)
+
+        out = dict(
+            tokens=tokens,
+            len=jnp.where(fed, length + 1, length),
+            table=table, refcount=refcount, oom=oom,
+            pol=(), rew=(),
+        )
+        for key, params, cfg in self._branches():
+            b = aux[key]
+            pk = b["k"].at[:, copy_dst].set(b["k"][:, copy_src], mode="drop")
+            pv = b["v"].at[:, copy_dst].set(b["v"][:, copy_src], mode="drop")
+            logits, cache = self.paged_decode_fn(
+                params, cfg, token,
+                {
+                    "k": pk, "v": pv, "table": table, "len": att_len,
+                    "pos": safe, "write_block": wb, "write_off": off,
+                },
+            )
+            out[key] = {
+                "k": cache["k"], "v": cache["v"],
+                "logits": jnp.where(
+                    fed[:, None], logits, b["logits"]
+                ).astype(b["logits"].dtype),
+            }
+        return out
+
+    # -- evaluator protocol -------------------------------------------------
+
+    def init_aux(self, root_states: Pytree, prefix: tuple) -> Pytree:
+        """Prefill each DISTINCT root once; siblings share its pages.
+
+        The ragged batched prefill runs over the ``prod(prefix[:-1])`` roots
+        (vs every slot in the dense evaluator), its dense rows scatter into
+        sequentially allocated pool pages, and all ``W = prefix[-1]`` slots
+        of a root point at the same pages with refcount ``W`` — including
+        the last partial page: the first write a slot makes there triggers
+        copy-on-write, so sharing is safe from tick zero.
+        """
+        from ..models import init_cache
+        from ..models.paged import num_pages
+
+        n = 1
+        for q in prefix:
+            n *= int(q)
+        w = int(prefix[-1])
+        r0 = n // w
+        lead = len(prefix) - 1
+
+        def flat(x):
+            x = jnp.expand_dims(x, lead)
+            x = jnp.broadcast_to(x, tuple(prefix) + x.shape[lead + 1:])
+            return x.reshape((n,) + x.shape[len(prefix):])
+
+        state = jax.tree.map(flat, root_states)
+        tokens = jnp.asarray(state.tokens, jnp.int32)
+        lengths = jnp.asarray(state.length, jnp.int32)
+        s_max = tokens.shape[-1]
+        bs, p = self.block_size, self.num_blocks
+        mp = num_pages(s_max, bs)
+
+        root_tokens = tokens[::w]
+        root_len = lengths[::w]
+        p_r = (root_len + bs - 1) // bs              # pages per root
+        offsets = jnp.cumsum(p_r) - p_r              # sequential block ids
+        page_idx = jnp.arange(mp)
+        valid = page_idx[None, :] < p_r[:, None]
+        dst_raw = offsets[:, None] + page_idx[None, :]
+        got = valid & (dst_raw < p)
+        dst = jnp.where(got, dst_raw, p).astype(jnp.int32)   # [r0, mp]
+        oom = jnp.sum(valid & ~got).astype(jnp.int32)
+        refcount = (
+            jnp.zeros((p,), jnp.int32)
+            .at[dst.reshape(-1)]
+            .add(jnp.where(got.reshape(-1), w, 0), mode="drop")
+        )
+        aux = {
+            "tokens": tokens,
+            "len": lengths,
+            "table": jnp.repeat(dst, w, axis=0),
+            "refcount": refcount,
+            "oom": oom,
+            "pol": (),
+            "rew": (),
+        }
+        for key, params, cfg in self._branches():
+            logits, cache = self.prefill_fn(
+                params, cfg, root_tokens, root_len,
+                init_cache(cfg, r0, mp * bs),
+            )
+            kv = cache["kv"]
+
+            def to_pool(x):
+                l_, _, _, hk, hd = x.shape
+                pages = x.reshape(l_, r0 * mp, bs, hk, hd)
+                pool = jnp.zeros((l_, p, bs, hk, hd), x.dtype)
+                return pool.at[:, dst.reshape(-1)].set(pages, mode="drop")
+
+            aux[key] = {
+                "k": to_pool(kv["k"]),
+                "v": to_pool(kv["v"]),
+                "logits": jnp.repeat(logits, w, axis=0),
+            }
+        self._maybe_raise(aux["oom"])
+        return aux
+
+    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
+        """Rollback = page-table edit; catch-up = token-by-token decode.
+
+        Suffix pages wholly beyond the common prefix are refcount-released
+        (no cache rows rewritten); the retained partial boundary page is
+        still shared, so the first catch-up write into it copies-on-write.
+        The divergent suffix re-decodes through :meth:`_advance` (each step
+        needs the previous step's page bookkeeping, so the dense chunked
+        catch-up does not apply).
+        """
+        del cfg
+        from ..models import release_pages
+
+        sub = self._take_rows(aux, rows)
+        r = rows.shape[0]
+        s_max = sub["tokens"].shape[-1]
+        start, target, tokens = self._rollback_targets(sub, new_state, mask)
+        bs = self.block_size
+        lo = (start + bs - 1) // bs
+        hi = (sub["len"] + bs - 1) // bs
+        refcount = release_pages(sub["refcount"], sub["table"], lo, hi)
+        sub = dict(sub, tokens=tokens, len=start, refcount=refcount)
+
+        def cond(c):
+            return jnp.any(c["len"] < target)
+
+        def body(c):
+            feed = c["len"] < target
+            tok = c["tokens"][jnp.arange(r), jnp.minimum(c["len"], s_max - 1)]
+            return self._advance(c, tok, feed)
+
+        sub = jax.lax.while_loop(cond, body, sub)
+        return self._put_rows(aux, rows, sub)
+
+    def aux_blocks(self, aux) -> Optional[jax.Array]:
+        return jnp.sum(aux["refcount"] > 0)

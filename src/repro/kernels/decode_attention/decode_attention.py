@@ -80,6 +80,110 @@ def _decode_kernel(
         ).astype(o_ref.dtype)
 
 
+def _paged_decode_kernel(
+    table_ref,  # [B, n_pages] i32 (scalar prefetch) — consumed by index maps
+    len_ref,    # [B] i32 (scalar prefetch) — per-batch valid KV prefix length
+    q_ref,      # [Hq, D]
+    k_ref,      # [block_size, Hkv, D] — one page, fetched via the page table
+    v_ref,      # [block_size, Hkv, D]
+    o_ref,      # [Hq, D]
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    block_k: int,
+    n_kv: int,
+    group: int,
+):
+    """Page-table decode: the math is the dense split-KV kernel's — only the
+    *addressing* differs.  ``table_ref`` is consumed by the BlockSpec index
+    maps (scalar prefetch drives the K/V page DMA), so logical position
+    ``pi·block_size + j`` of batch row ``b`` streams from physical pool block
+    ``table[b, pi]`` while the online-softmax state never notices."""
+    del table_ref
+    _decode_kernel(
+        len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+        scale=scale, block_k=block_k, n_kv=n_kv, group=group,
+    )
+
+
+def paged_decode_attention_fwd(
+    q: jax.Array,           # [B, Hq, D]
+    pool_k: jax.Array,      # [P, block_size, Hkv, D] — shared block pool
+    pool_v: jax.Array,      # [P, block_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] i32 — pool block id per logical page
+    kv_len: jax.Array,      # [] or [B] i32 — valid prefix length per row
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Single-token GQA decode over a block-sparse (paged) KV cache.
+
+    Logical KV position ``t`` of batch row ``b`` lives at pool row
+    ``(page_table[b, t // block_size], t % block_size)``.  The sequential
+    grid axis walks pages instead of contiguous cache blocks; the page id is
+    read from SMEM (scalar prefetch) inside the K/V index maps, so each
+    page's DMA is issued directly against the pool — no dense gather of the
+    cache ever materializes.  Entries beyond ``ceil(kv_len / block_size)``
+    may be garbage: they are clipped into range (the DMA must stay in
+    bounds) and their scores are masked by ``kv_len`` exactly like the dense
+    kernel's tail.
+    """
+    b, hq, d = q.shape
+    p, block_size, hkv, _ = pool_k.shape
+    n_pages = page_table.shape[1]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    lens = jnp.broadcast_to(
+        jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,)
+    )
+    table = jnp.clip(page_table.astype(jnp.int32), 0, p - 1)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=scale, block_k=block_size,
+        n_kv=n_pages, group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((None, hq, d), lambda bi, pi, tab, lens: (bi, 0, 0)),
+            pl.BlockSpec(
+                (None, block_size, hkv, d),
+                lambda bi, pi, tab, lens: (tab[bi, pi], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, block_size, hkv, d),
+                lambda bi, pi, tab, lens: (tab[bi, pi], 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, hq, d), lambda bi, pi, tab, lens: (bi, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, 1), jnp.float32),
+            pltpu.VMEM((hq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, d), q.dtype),
+        interpret=interpret,
+        **(
+            {}
+            if interpret
+            else {
+                "compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+            }
+        ),
+    )(table, lens, q, pool_k, pool_v)
+    return out
+
+
 def decode_attention_fwd(
     q: jax.Array,        # [B, Hq, D]
     k_cache: jax.Array,  # [B, S, Hkv, D]

@@ -6,7 +6,7 @@ import functools
 
 import jax
 
-from .decode_attention import decode_attention_fwd
+from .decode_attention import decode_attention_fwd, paged_decode_attention_fwd
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -18,4 +18,15 @@ def decode_attention(
         interpret = jax.default_backend() != "tpu"
     return decode_attention_fwd(
         q, k_cache, v_cache, kv_len, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q, pool_k, pool_v, page_table, kv_len, *, interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_decode_attention_fwd(
+        q, pool_k, pool_v, page_table, kv_len, interpret=interpret
     )

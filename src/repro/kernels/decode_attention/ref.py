@@ -6,9 +6,18 @@ import jax
 import jax.numpy as jnp
 
 from ...models.layers import decode_attention as _ref
+from ...models.layers import paged_decode_attention as _paged_ref
 
 
 def decode_attention_ref(q, k_cache, v_cache, kv_len):
     # models.layers.decode_attention takes [B, 1, Hq, D].
     out = _ref(q[:, None], k_cache, v_cache, jnp.asarray(kv_len))
+    return out[:, 0]
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, page_table, kv_len):
+    # Dense-gather oracle: materialize each row's pages, then ragged decode.
+    out = _paged_ref(
+        q[:, None], pool_k, pool_v, page_table, jnp.asarray(kv_len)
+    )
     return out[:, 0]

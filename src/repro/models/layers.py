@@ -63,8 +63,10 @@ def chunked_attention(
     """Online-softmax attention over KV chunks (GQA-aware).
 
     ``q_offset`` is the absolute position of q[0] (for causal masking during
-    chunked prefill / decode).  ``kv_len`` masks the KV tail (cache slots that
-    have not been written yet).
+    chunked prefill / decode); it may be a scalar or a per-row ``[B]`` vector
+    (ragged chunked catch-up: every row decodes its chunk at its own
+    offset).  ``kv_len`` masks the KV tail (cache slots that have not been
+    written yet); scalar or per-row ``[B]``.
     """
     b, sq, hq, d = q.shape
     _, sk, hkv, _ = k.shape
@@ -87,7 +89,12 @@ def chunked_attention(
     kc = k.reshape(b, n_chunks, chunk, hkv, d)
     vc = v.reshape(b, n_chunks, chunk, hkv, d)
 
-    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)            # [Sq]
+    # [Bq, Sq] with Bq in {1, B}: scalar offsets broadcast, vector offsets
+    # give each row its own causal frontier.
+    q_pos = (
+        jnp.asarray(q_offset, jnp.int32).reshape(-1, 1) + jnp.arange(sq)
+    )
+    kl = None if kv_len is None else jnp.asarray(kv_len).reshape(-1)
 
     def body(carry, xs):
         m, l, acc = carry
@@ -97,11 +104,12 @@ def chunked_attention(
             preferred_element_type=jnp.float32,
         ) * scale                                             # [B,Hkv,G,Sq,C]
         kv_pos = idx * chunk + jnp.arange(chunk)              # [C]
-        mask = jnp.ones((sq, chunk), jnp.bool_)
+        mask = jnp.ones((q_pos.shape[0], sq, chunk), jnp.bool_)
         if causal:
-            mask &= q_pos[:, None] >= kv_pos[None, :]
-        if kv_len is not None:
-            mask &= kv_pos[None, :] < kv_len
+            mask = mask & (q_pos[:, :, None] >= kv_pos[None, None, :])
+        if kl is not None:
+            mask = mask & (kv_pos[None, None, :] < kl[:, None, None])
+        mask = mask[:, None, None]                       # [B?,1,1,Sq,C]
         s = jnp.where(mask, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -156,6 +164,29 @@ def decode_attention(
         preferred_element_type=jnp.float32,
     )
     return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,           # [B, 1, Hq, D]
+    pool_k: jax.Array,      # [P, block_size, Hkv, D] — shared block pool
+    pool_v: jax.Array,      # [P, block_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] i32
+    kv_len: jax.Array,      # [] or [B]
+) -> jax.Array:
+    """Single-token attention over a paged (block-sparse) KV cache.
+
+    jnp oracle for the Pallas kernel in ``kernels/decode_attention``: gather
+    each row's pages into a dense view, then run the ragged decode path.
+    Table entries beyond ``ceil(kv_len / block_size)`` may be garbage — they
+    are clipped into pool range and their positions masked by ``kv_len``.
+    """
+    b = q.shape[0]
+    p, block_size, hkv, d = pool_k.shape
+    n_pages = page_table.shape[1]
+    tab = jnp.clip(page_table.astype(jnp.int32), 0, p - 1)
+    k = pool_k[tab].reshape(b, n_pages * block_size, hkv, d)
+    v = pool_v[tab].reshape(b, n_pages * block_size, hkv, d)
+    return decode_attention(q, k, v, kv_len)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +254,36 @@ def attention_block(
     against bit-for-bit in tests/test_kernels.py.
     """
     q, k, v = attention_qkv(p, cfg, x, positions, rope=rope)
+    if cache is not None and "table" in cache:
+        # Paged decode: K/V live in a shared block pool addressed through a
+        # per-row page table.  The caller pre-computes the physical write
+        # target — ``write_block``/``write_off`` per row, with block id == P
+        # (out of range) meaning "do not write" (masked slot / exhausted
+        # pool) — and ``len`` is the ATTEND length (it already counts the
+        # token being written, where one is).  Drop-mode scatter keeps the
+        # whole thing one fused batched op.
+        assert x.shape[1] == 1, "paged cache supports single-token decode"
+        wb, wo = cache["write_block"], cache["write_off"]
+        kc = cache["k"].at[wb, wo].set(
+            k[:, 0].astype(cache["k"].dtype), mode="drop"
+        )
+        vc = cache["v"].at[wb, wo].set(
+            v[:, 0].astype(cache["v"].dtype), mode="drop"
+        )
+        if _use_pallas(cfg):
+            from ..kernels.decode_attention.ops import (
+                paged_decode_attention as _pdk,
+            )
+
+            out = _pdk(q[:, 0], kc, vc, cache["table"], cache["len"])[:, None]
+        else:
+            out = paged_decode_attention(
+                q, kc, vc, cache["table"], cache["len"]
+            )
+        new_cache = dict(cache, k=kc, v=vc)
+        b, s = x.shape[:2]
+        out = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
+        return out, new_cache
     if cache is None:
         if _use_pallas(cfg) and causal and q.shape[1] == k.shape[1]:
             from ..kernels.flash_attention.ops import flash_attention
@@ -248,12 +309,24 @@ def attention_block(
             vc = jax.lax.dynamic_update_slice_in_dim(
                 cache["v"], v.astype(cache["v"].dtype), start, axis=1
             )
-        else:
-            assert x.shape[1] == 1, "vector cache lengths support decode only"
+        elif x.shape[1] == 1:
             bidx = jnp.arange(x.shape[0])
             kc = cache["k"].at[bidx, start].set(k[:, 0].astype(cache["k"].dtype))
             vc = cache["v"].at[bidx, start].set(v[:, 0].astype(cache["v"].dtype))
-        new_len = start + x.shape[1]
+        else:
+            # Ragged chunk write (chunked catch-up refill): every row writes
+            # its S new entries at its own offset; positions past the cache
+            # end are dropped (rows already caught up write only into their
+            # garbage-beyond-len region, which stays garbage).
+            bidx = jnp.arange(x.shape[0])[:, None]
+            pos = start[:, None] + jnp.arange(x.shape[1])[None, :]
+            kc = cache["k"].at[bidx, pos].set(
+                k.astype(cache["k"].dtype), mode="drop"
+            )
+            vc = cache["v"].at[bidx, pos].set(
+                v.astype(cache["v"].dtype), mode="drop"
+            )
+        new_len = jnp.minimum(start + x.shape[1], cache["k"].shape[1])
         if x.shape[1] == 1:
             # The decode kernel takes scalar or per-slot [B] cache lengths,
             # so the ragged continuous-batching path is covered too.

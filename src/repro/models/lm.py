@@ -606,6 +606,44 @@ def prefill_ragged(
     return logits[:, 0], dict(cache, len=lengths)
 
 
+def decode_chunk(
+    params, cfg: ModelConfig, tokens, target, cache
+) -> tuple[jax.Array, Pytree]:
+    """Ragged chunked catch-up: advance each row up to ``C`` tokens at once.
+
+    ``tokens`` is ``[B, C]`` holding, for each row, the next ``C`` tokens
+    starting at the row's own ``cache['len']``; ``target`` (``i32[B]``) is
+    the length each row is catching up *to*.  One forward re-decodes a whole
+    chunk of a divergent suffix — batched over rows AND positions — instead
+    of ``C`` single-token ``decode_step`` dispatches (the refill while_loop
+    this replaces).  Per row:
+
+    * rows with ``len < target`` advance to ``min(len + C, target)``;
+    * rows already at target keep their length — their chunk writes land
+      beyond ``len`` in the garbage region and stay invisible;
+    * returned logits ``[B, V]`` are gathered at ``target - 1 - len``
+      (clamped into the chunk), i.e. they are the next-token logits for any
+      row that *finishes* its catch-up within this chunk — exactly the rows
+      whose logits the caller refreshes.
+
+    Only KV-cache families can take this path (same contract as
+    ``prefill_ragged``: positions ``>= len`` are garbage until overwritten).
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"decode_chunk supports KV-cache LM families, not {cfg.family!r}"
+        )
+    cur = jnp.asarray(cache["len"], jnp.int32)
+    target = jnp.asarray(target, jnp.int32)
+    c = tokens.shape[1]
+    gather = jnp.clip(target - 1 - cur, 0, c - 1)
+    logits, cache = _step_with_cache(
+        params, cfg, {"tokens": tokens}, cache, last_positions=gather
+    )
+    new_len = jnp.where(cur < target, jnp.minimum(cur + c, target), cur)
+    return logits[:, 0], dict(cache, len=new_len)
+
+
 def decode_step(params, cfg: ModelConfig, token, cache) -> tuple[jax.Array, Pytree]:
     """One autoregressive step.  token: [B] or [B, 1] → (logits [B, V], cache).
 

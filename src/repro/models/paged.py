@@ -1,0 +1,227 @@
+"""Paged KV cache: a shared block pool + per-slot page tables + refcounts.
+
+Dense slot caches give every in-flight sequence its own ``[max_len]`` KV
+row, so HBM — not compute — caps how many sequences stay in flight.  The
+paged layout stores K/V in a shared pool of fixed-size blocks
+(``[L, num_blocks, block_size, Hkv, D]``) and addresses each slot's logical
+positions through a per-slot page table (``i32[N, max_pages]``): logical
+position ``t`` of slot ``n`` lives at pool row
+``(table[n, t // block_size], t % block_size)``.
+
+Blocks carry refcounts so slots can SHARE pages: sibling search slots that
+fan out from one root prefill all point at the same prefix blocks
+(refcount = number of sharers), and a slot only gets a private copy of a
+block when it is about to WRITE into a shared one (copy-on-write).
+Rollback becomes a page-table edit: dropping a suffix decrements the
+refcounts of its exclusive pages back into the free pool — no cache rows
+are rewritten.
+
+Invariants (tested in tests/test_paged_evaluator.py):
+
+* ``refcount[p]`` == number of (slot, page-index) pairs with
+  ``table[n, i] == p`` and ``i < ceil(len[n] / block_size)`` — i.e. live
+  table entries, counted with multiplicity.
+* Table entries at page indices ``>= ceil(len[n] / block_size)`` are
+  garbage (they may hold ``num_blocks`` or stale ids) and must never be
+  dereferenced without clipping + kv_len masking.
+* Within a live block, rows at positions ``>= len[n]`` are garbage, exactly
+  like the dense contract — masked by attention, overwritten before
+  visible.
+* A slot writes only into blocks with ``refcount == 1`` that it owns; any
+  write targeting a shared block copies it first (copy-on-write).
+
+Everything here is functional (pure jnp) so it jits inside the async
+engines' ``lax.while_loop`` carries; allocation failure cannot raise from
+traced code, so it latches an ``oom`` counter that callers surface as
+:class:`PagePoolExhaustedError` at the eager boundary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import attention_block, mlp_block, moe_block, rms_norm
+from .lm import KV_CACHE_FAMILIES, _layer_scan
+
+
+class PagePoolExhaustedError(RuntimeError):
+    """The shared KV block pool ran out of free blocks.
+
+    Raised at eager boundaries (init / after a jitted program settles) when
+    the latched ``oom`` counter is nonzero; grow ``num_blocks`` or lower
+    concurrency.
+    """
+
+
+def num_pages(max_len: int, block_size: int) -> int:
+    return -(-max_len // block_size)
+
+
+def init_paged_cache(
+    cfg: ModelConfig,
+    n_slots: int,
+    max_len: int,
+    *,
+    block_size: int,
+    num_blocks: int,
+):
+    """Allocate an empty paged KV cache (pool + tables + refcounts).
+
+    ``table`` starts filled with the out-of-range sentinel ``num_blocks``
+    ("no block"), ``len`` at zero, every block free.  ``oom`` counts
+    allocation requests that found no free block (latched, never reset by
+    library code).
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"paged KV caches support families {KV_CACHE_FAMILIES}, "
+            f"not {cfg.family!r}"
+        )
+    L = cfg.num_layers
+    hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    mp = num_pages(max_len, block_size)
+    return {
+        "k": jnp.zeros((L, num_blocks, block_size, hkv, hd), cfg.dtype),
+        "v": jnp.zeros((L, num_blocks, block_size, hkv, hd), cfg.dtype),
+        "table": jnp.full((n_slots, mp), num_blocks, jnp.int32),
+        "len": jnp.zeros((n_slots,), jnp.int32),
+        "refcount": jnp.zeros((num_blocks,), jnp.int32),
+        "oom": jnp.int32(0),
+    }
+
+
+def alloc_blocks(refcount: jax.Array, need: jax.Array):
+    """Grab one free pool block per requesting row — functionally.
+
+    ``refcount``: i32[P]; ``need``: bool[N].  The k-th requesting row (in
+    row order) receives the k-th free block (in pool order), built from two
+    cumsums and one drop-mode scatter — no host loop, no sort, jits inside
+    while_loop bodies.
+
+    Returns ``(blocks, refcount, n_failed)`` where ``blocks`` is i32[N]
+    holding the allocated block id, or the sentinel ``P`` for rows that
+    asked for nothing *or* found the pool exhausted; allocated blocks come
+    back with refcount 1; ``n_failed`` counts needy rows that got nothing.
+    """
+    p = refcount.shape[0]
+    n = need.shape[0]
+    free = refcount == 0
+    free_rank = jnp.cumsum(free) - 1          # rank of each free block
+    req_rank = jnp.cumsum(need) - 1           # rank of each requesting row
+    # rank -> block id: only the first N free blocks can be handed out this
+    # call, so the map is sized N and later free blocks drop out.
+    rank_to_block = (
+        jnp.full((n,), p, jnp.int32)
+        .at[jnp.where(free, free_rank, n)]
+        .set(jnp.arange(p, dtype=jnp.int32), mode="drop")
+    )
+    blocks = jnp.where(
+        need, rank_to_block[jnp.clip(req_rank, 0, n - 1)], p
+    ).astype(jnp.int32)
+    got = need & (blocks < p)
+    refcount = refcount.at[blocks].add(
+        jnp.where(got, 1, 0), mode="drop"
+    )
+    return blocks, refcount, jnp.sum(need & ~got)
+
+
+def release_pages(
+    refcount: jax.Array,
+    table: jax.Array,      # [R, max_pages] — rows being rolled back
+    lo: jax.Array,         # i32[R] — first page index to release
+    hi: jax.Array,         # i32[R] — one past the last page index
+):
+    """Decref every table entry in ``[lo[r], hi[r])`` of each row.
+
+    The page-table *edit* that replaces a dense cache rewrite on rollback:
+    blocks whose refcount hits zero rejoin the free pool; shared blocks
+    simply lose one sharer.
+    """
+    r, mp = table.shape
+    p = refcount.shape[0]
+    pages = jnp.arange(mp)
+    live = (pages[None, :] >= lo[:, None]) & (pages[None, :] < hi[:, None])
+    idx = jnp.where(live, table, p).reshape(-1)
+    return refcount.at[idx].add(
+        jnp.where(live.reshape(-1), -1, 0), mode="drop"
+    )
+
+
+def blocks_in_use(cache) -> jax.Array:
+    """Number of pool blocks currently allocated (refcount > 0)."""
+    return jnp.sum(cache["refcount"] > 0)
+
+
+def gather_pages(cache):
+    """Debug/oracle helper: materialize dense per-slot K/V views.
+
+    Returns ``(k, v)`` of shape ``[L, N, max_pages·block_size, Hkv, D]``;
+    positions ``>= len[n]`` are garbage per the contract.
+    """
+    p = cache["k"].shape[1]
+    t = jnp.clip(cache["table"], 0, p - 1)
+
+    def g(pool):
+        out = pool[:, t]                      # [L, N, mp, bs, hkv, hd]
+        l_, n_, mp_, bs_, hkv_, hd_ = out.shape
+        return out.reshape(l_, n_, mp_ * bs_, hkv_, hd_)
+
+    return g(cache["k"]), g(cache["v"])
+
+
+def paged_decode_step(params, cfg: ModelConfig, token, cache):
+    """One decode step over a paged cache; pure write-and-attend.
+
+    The caller owns all page bookkeeping (COW, allocation, refcounts, len)
+    and passes the resolved physical targets in the cache dict:
+
+    * ``write_block``/``write_off`` (i32[N]): where each row's new K/V entry
+      lands; block id == pool size means "no write" (masked row / exhausted
+      pool) and the scatter drops it.
+    * ``pos`` (i32[N]): the query's absolute position (RoPE).
+    * ``len`` (i32[N]): the ATTEND length — includes the token being written
+      for rows that write, excludes it for masked rows.
+
+    Returns ``(logits [N, V], cache with updated pools)``.
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"paged_decode_step supports families {KV_CACHE_FAMILIES}, "
+            f"not {cfg.family!r}"
+        )
+    token = jnp.asarray(token).reshape(-1, 1)
+    x = params["embed"][token]
+    positions = cache["pos"][:, None]
+
+    def body(x, xs):
+        bp, pk, pv = xs
+        layer_cache = {
+            "k": pk,
+            "v": pv,
+            "table": cache["table"],
+            "len": cache["len"],
+            "write_block": cache["write_block"],
+            "write_off": cache["write_off"],
+        }
+        h, nc = attention_block(
+            bp["attn"], cfg, rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+            positions, cache=layer_cache,
+        )
+        x = x + h
+        if cfg.family == "moe":
+            h, _ = moe_block(
+                bp["moe"], cfg, rms_norm(x, bp["mlp_norm"], cfg.rms_eps)
+            )
+        else:
+            h = mlp_block(bp["mlp"], rms_norm(x, bp["mlp_norm"], cfg.rms_eps))
+        return x + h, (nc["k"], nc["v"])
+
+    x, (ks, vs) = _layer_scan(
+        body, x, (params["blocks"], cache["k"], cache["v"]), cfg
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits[:, -1, :], dict(cache, k=ks, v=vs)

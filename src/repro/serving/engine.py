@@ -10,7 +10,11 @@ async-slot scheduler (no slot ever waits for the longest request).
 The per-slot cache layout (``len`` vector; rows ``>= len`` garbage until
 overwritten) is the contract shared with
 :class:`repro.core.evaluators.CachedModelEvaluator` — see the README's
-"KV-cache contract" section.
+"KV-cache contract" section.  With ``ServeConfig.paged`` the slots draw
+from a shared KV block pool (:mod:`repro.models.paged`) instead of each
+owning a dense ``[max_len]`` row: admission becomes a page-table splice,
+EOS returns the slot's pages to the pool, and the engine admits fewer
+prompts (rather than failing) when the pool is tight.
 """
 
 from __future__ import annotations
@@ -24,8 +28,12 @@ import numpy as np
 
 from ..models import (
     KV_CACHE_FAMILIES,
+    PagePoolExhaustedError,
     decode_step,
     init_cache,
+    init_paged_cache,
+    num_pages,
+    paged_decode_step,
     prefill,
     prefill_ragged,
 )
@@ -38,6 +46,13 @@ class ServeConfig:
     max_len: int = 512
     temperature: float = 0.0     # 0 = greedy
     eos_token: int = 0
+    # Paged KV (KV-cache families only): slots share one block pool instead
+    # of each owning a dense [max_len] row, so the HBM high-water mark tracks
+    # tokens actually in flight.  num_blocks=None sizes the pool at the
+    # dense equivalent; shrink it to oversubscribe slots.
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: Optional[int] = None
 
 
 class ServingEngine:
@@ -45,8 +60,35 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
-        self.cache = init_cache(cfg, serve_cfg.batch_slots, serve_cfg.max_len)
         b = serve_cfg.batch_slots
+        if serve_cfg.paged:
+            if cfg.family not in KV_CACHE_FAMILIES:
+                raise ValueError(
+                    f"paged serving needs a KV-cache family "
+                    f"{KV_CACHE_FAMILIES}, not {cfg.family!r}"
+                )
+            bs = serve_cfg.block_size
+            mp = num_pages(serve_cfg.max_len, bs)
+            self.num_blocks = (
+                serve_cfg.num_blocks
+                if serve_cfg.num_blocks is not None
+                else b * mp
+            )
+            self.cache = init_paged_cache(
+                cfg, b, serve_cfg.max_len,
+                block_size=bs, num_blocks=self.num_blocks,
+            )
+            # Host-side page accounting: serving slots never share blocks
+            # (independent requests), so a free-list + table is the whole
+            # allocator — no refcounts needed.
+            self._table = np.full((b, mp), self.num_blocks, np.int32)
+            self._free = list(range(self.num_blocks - 1, -1, -1))
+            self._paged_decode = jax.jit(
+                lambda p, t, c: paged_decode_step(p, cfg, t, c)
+            )
+            self._splice = jax.jit(self._splice_pages)
+        else:
+            self.cache = init_cache(cfg, b, serve_cfg.max_len)
         self.active = np.zeros(b, bool)
         self.lengths = np.zeros(b, np.int32)
         self.outputs: list[list[int]] = [[] for _ in range(b)]
@@ -60,6 +102,35 @@ class ServingEngine:
         )
         self._prefill_one = jax.jit(lambda p, b, c: prefill(p, cfg, b, c))
         self._last_tokens = np.zeros(b, np.int32)
+
+    def blocks_in_use(self) -> int:
+        """Pool blocks currently allocated (paged mode only)."""
+        return self.num_blocks - len(self._free)
+
+    def _splice_pages(self, pool_k, pool_v, dense_k, dense_v, dst):
+        """Splice a dense ragged-prefill cache into the shared pool.
+
+        ``dense_k/v``: ``[L, take, S_pad, Hkv, D]`` with ``S_pad`` a multiple
+        of ``block_size``; ``dst``: i32[take, S_pad // block_size] block ids
+        (sentinel ``num_blocks`` entries drop out of the scatter).  This is
+        the page-table analogue of the dense engine's slot-scatter splice.
+        """
+        l_, t_, s_, hk, hd = dense_k.shape
+        bs = self.sc.block_size
+        npg = s_ // bs
+        flat = dst.reshape(-1)
+        kd = dense_k.reshape(l_, t_ * npg, bs, hk, hd)
+        vd = dense_v.reshape(l_, t_ * npg, bs, hk, hd)
+        return (
+            pool_k.at[:, flat].set(kd.astype(pool_k.dtype), mode="drop"),
+            pool_v.at[:, flat].set(vd.astype(pool_v.dtype), mode="drop"),
+        )
+
+    def _release_slot_pages(self, slot: int) -> None:
+        row = self._table[slot]
+        for blk in row[row < self.num_blocks]:
+            self._free.append(int(blk))
+        self._table[slot] = self.num_blocks
 
     def add_request(self, prompt_tokens: list[int]) -> Optional[int]:
         return self.add_requests([prompt_tokens])[0]
@@ -82,30 +153,64 @@ class ServingEngine:
         free = np.flatnonzero(~self.active)
         take = min(len(free), len(prompts))
         admitted: list[Optional[int]] = [None] * len(prompts)
+        cfg, sc = self.cfg, self.sc
+        if sc.paged and take:
+            # Admit only what the block pool can hold right now (prompts
+            # are admitted in order; the rest wait for pages to free).
+            budget, n_fit = len(self._free), 0
+            for p in prompts[:take]:
+                need = -(-len(p) // sc.block_size)
+                if need > budget:
+                    break
+                budget -= need
+                n_fit += 1
+            take = n_fit
         if take == 0:
             return admitted
         slots = free[:take].astype(np.int32)
-        cfg, sc = self.cfg, self.sc
         if cfg.family in KV_CACHE_FAMILIES:
             lengths = np.asarray([len(p) for p in prompts[:take]], np.int32)
             max_p = int(lengths.max())
             toks = np.zeros((take, max_p), np.int32)
             for i, p in enumerate(prompts[:take]):
                 toks[i, : len(p)] = p
+            s_pad = (
+                -(-max_p // sc.block_size) * sc.block_size
+                if sc.paged else sc.max_len
+            )
             logits, cache_n = self._prefill_ragged(
                 self.params, jnp.asarray(toks), jnp.asarray(lengths),
-                init_cache(cfg, take, sc.max_len),
+                init_cache(cfg, take, s_pad),
             )
-            # One scatter splices all admitted slots into the engine cache
-            # (layer-stacked leaves carry the slot axis at position 1).
-            self.cache = jax.tree.map(
-                lambda f, o: (
-                    f.at[:, slots].set(o)
-                    if hasattr(f, "ndim") and f.ndim > 1 else f
-                ),
-                self.cache,
-                cache_n,
-            )
+            if sc.paged:
+                # Page-table splice: allocate each prompt's pages, scatter
+                # the dense prefill blocks into the pool, point the slots'
+                # tables at them.
+                npg = s_pad // sc.block_size
+                dst = np.full((take, npg), self.num_blocks, np.int32)
+                for i in range(take):
+                    for pi in range(-(-int(lengths[i]) // sc.block_size)):
+                        dst[i, pi] = self._free.pop()
+                pk, pv = self._splice(
+                    self.cache["k"], self.cache["v"],
+                    cache_n["kv"]["k"], cache_n["kv"]["v"],
+                    jnp.asarray(dst),
+                )
+                self.cache = dict(self.cache, k=pk, v=pv)
+                for i in range(take):
+                    self._table[int(slots[i]), :npg] = dst[i]
+            else:
+                # One scatter splices all admitted slots into the engine
+                # cache (layer-stacked leaves carry the slot axis at
+                # position 1).
+                self.cache = jax.tree.map(
+                    lambda f, o: (
+                        f.at[:, slots].set(o)
+                        if hasattr(f, "ndim") and f.ndim > 1 else f
+                    ),
+                    self.cache,
+                    cache_n,
+                )
             first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         else:
             first = np.zeros(take, np.int32)
@@ -141,8 +246,42 @@ class ServingEngine:
         if not self.active.any():
             return {}
         tokens = jnp.asarray(self._last_tokens, jnp.int32)
-        self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
-        logits, self.cache = self._decode(self.params, tokens, self.cache)
+        if self.sc.paged:
+            bs = self.sc.block_size
+            safe = np.clip(self.lengths, 0, self.sc.max_len - 1)
+            bi, off = safe // bs, safe % bs
+            wb = np.full(self.active.shape, self.num_blocks, np.int32)
+            for slot in np.flatnonzero(self.active):
+                if off[slot] == 0:
+                    # Entering a fresh logical page: allocate.  Serving
+                    # slots own their pages exclusively, so off > 0 writes
+                    # go straight into the slot's current block — no COW.
+                    if not self._free:
+                        raise PagePoolExhaustedError(
+                            f"no free KV block for slot {slot} at position "
+                            f"{int(safe[slot])} "
+                            f"(num_blocks={self.num_blocks})"
+                        )
+                    self._table[slot, bi[slot]] = self._free.pop()
+                wb[slot] = self._table[slot, bi[slot]]
+            att_len = self.lengths + self.active.astype(np.int32)
+            run_cache = dict(
+                self.cache,
+                table=jnp.asarray(self._table),
+                len=jnp.asarray(att_len, jnp.int32),
+                pos=jnp.asarray(safe, jnp.int32),
+                write_block=jnp.asarray(wb, jnp.int32),
+                write_off=jnp.asarray(off, jnp.int32),
+            )
+            logits, run_cache = self._paged_decode(
+                self.params, tokens, run_cache
+            )
+            self.cache = dict(
+                self.cache, k=run_cache["k"], v=run_cache["v"]
+            )
+        else:
+            self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
+            logits, self.cache = self._decode(self.params, tokens, self.cache)
         if self.sc.temperature > 0 and rng is not None:
             toks = jax.random.categorical(rng, logits / self.sc.temperature)
         else:
@@ -157,6 +296,8 @@ class ServingEngine:
             self.lengths[slot] += 1
             if t == self.sc.eos_token or self.lengths[slot] >= self.sc.max_len - 1:
                 self.active[slot] = False
+                if self.sc.paged:
+                    self._release_slot_pages(int(slot))
         return emitted
 
     def run(self, prompts: list[list[int]], max_ticks: int = 256):

@@ -51,6 +51,9 @@ class SearchService:
         reward_cfg: Optional[ModelConfig] = None,
         reward_params=None,
         evaluator: Optional[Evaluator] = None,
+        paged: bool = False,
+        block_size: int = 16,
+        num_blocks: Optional[int] = None,
     ):
         if spec.batch <= 0:
             raise ValueError("SearchService needs a batched spec (batch > 0)")
@@ -75,11 +78,32 @@ class SearchService:
             cacheable = (
                 spec.engine == "async" and families <= set(KV_CACHE_FAMILIES)
             )
-            ev_cls = CachedModelEvaluator if cacheable else ModelEvaluator
-            evaluator = ev_cls(
-                model_cfg, params, top_k=top_k, eos_token=eos_token,
+            if paged and not cacheable:
+                raise ValueError(
+                    "paged=True needs an async-engine spec and a KV-cache "
+                    f"model family, got engine={spec.engine!r} "
+                    f"families={sorted(families)}"
+                )
+            kwargs = dict(
+                top_k=top_k, eos_token=eos_token,
                 reward_cfg=reward_cfg, reward_params=reward_params,
             )
+            if paged:
+                from ..core.evaluators import PagedCachedModelEvaluator
+                from ..models import num_pages
+
+                slots = spec.batch * spec.wave_size
+                if num_blocks is None:
+                    # Dense-equivalent upper bound; tune down to exploit
+                    # prefix sharing (siblings share prompt pages).
+                    num_blocks = slots * num_pages(max_len, block_size)
+                evaluator = PagedCachedModelEvaluator(
+                    model_cfg, params, block_size=block_size,
+                    num_blocks=num_blocks, **kwargs,
+                )
+            else:
+                ev_cls = CachedModelEvaluator if cacheable else ModelEvaluator
+                evaluator = ev_cls(model_cfg, params, **kwargs)
         self.env = env
         self.evaluator = evaluator
         self._search = build_searcher(env, spec, evaluator=evaluator)

@@ -232,25 +232,30 @@ def test_refill_rollback_matches_fresh_prefill(lm):
     )
 
 
-def test_refill_decodes_only_divergent_suffix(lm):
-    """The rollback catch-up loop runs exactly max-divergence decode steps
-    (counted with a traced callback), not a full re-prefill."""
+@pytest.mark.parametrize("refill_chunk,expect_calls", [(1, 2), (2, 1), (8, 1)])
+def test_refill_catches_up_in_chunks(lm, refill_chunk, expect_calls):
+    """The rollback catch-up runs ceil(max divergence / refill_chunk)
+    batched ``decode_chunk`` calls (counted with a traced callback) — one
+    dispatch per chunk, not one per divergent token, and never the full
+    re-prefill."""
     cfg, params = lm
     calls = []
-    from repro.models import decode_step
+    from repro.models import decode_chunk
 
-    def counting_decode(p, c, t, cache):
+    def counting_chunk(p, c, t, target, cache):
         jax.debug.callback(lambda: calls.append(1))
-        return decode_step(p, c, t, cache)
+        return decode_chunk(p, c, t, target, cache)
 
     ev = CachedModelEvaluator(
-        cfg, params, top_k=4, eos_token=1, decode_fn=counting_decode
+        cfg, params, top_k=4, eos_token=1,
+        chunk_fn=counting_chunk, refill_chunk=refill_chunk,
     )
     scfg = _scfg()
     start = _ragged_states(lengths=(10, 10))
     aux = ev.init_aux(start, (2, 1))
     # Row 0: same path, one token shorter (the settle→parent refill shape):
-    # only the final prompt token re-decodes.  Row 1: diverges at position 7.
+    # only the final prompt token re-decodes.  Row 1: diverges at position 7
+    # → max divergence 2 tokens.
     new_tokens = np.asarray(start.tokens).copy()
     new_tokens[0, 9:] = 0
     new_tokens[1, 7] = 61
@@ -265,10 +270,14 @@ def test_refill_decodes_only_divergent_suffix(lm):
         scfg, aux, jnp.arange(2), new_state, jnp.ones((2,), jnp.bool_)
     )
     jax.effects_barrier()
-    # Max divergence: row 1 rolls back to 7 → 2 catch-up iterations (each one
-    # batched decode), NOT the 9 a full re-prefill would cost.
-    assert len(calls) == 2, len(calls)
+    assert len(calls) == expect_calls, len(calls)
     np.testing.assert_array_equal(np.asarray(aux2["len"]), [9, 9])
+    # The chunked catch-up lands on the same logits a fresh prefill gives.
+    fresh = ev.init_aux(new_state, (2, 1))
+    np.testing.assert_allclose(
+        np.asarray(aux2["pol"]["logits"], np.float32),
+        np.asarray(fresh["pol"]["logits"], np.float32), **TOL,
+    )
 
 
 # ---------------------------------------------------------------------------

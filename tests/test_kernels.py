@@ -9,8 +9,14 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    paged_decode_attention,
+)
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.ssd_scan.ops import ssd_scan
@@ -96,6 +102,67 @@ def test_decode_attention_ragged_kv_len_matches_ref(dtype):
     ref = decode_attention_ref(q, kc, vc, lens)
     np.testing.assert_allclose(
         np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------------
+# paged_decode_attention — page-table addressed pool blocks via SMEM
+# scalar prefetch; parity with the dense kernel over gathered pages.
+# ---------------------------------------------------------------------------
+
+PDA_SHAPES = [
+    # (b, hq, hkv, d, block_size, n_pages, num_blocks, lens)
+    (4, 8, 2, 64, 16, 4, 32, (1, 17, 48, 64)),
+    (2, 4, 4, 128, 32, 2, 8, (64, 33)),
+    (3, 16, 4, 32, 8, 8, 64, (5, 40, 64)),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", PDA_SHAPES)
+def test_paged_decode_attention_matches_ref(shape, dtype):
+    b, hq, hkv, d, bs, npg, P, lens = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 4)
+    q = jax.random.normal(ks[0], (b, hq, d), dtype)
+    pool_k = jax.random.normal(ks[1], (P, bs, hkv, d), dtype)
+    pool_v = jax.random.normal(ks[2], (P, bs, hkv, d), dtype)
+    # Random non-overlapping page assignment (the allocator's invariant).
+    table = (
+        jax.random.permutation(ks[3], P)[: b * npg]
+        .reshape(b, npg).astype(jnp.int32)
+    )
+    kv_len = jnp.asarray(lens, jnp.int32)
+    out = paged_decode_attention(q, pool_k, pool_v, table, kv_len)
+    ref = paged_decode_attention_ref(q, pool_k, pool_v, table, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+    # ... and with the pages gathered dense, through the dense kernel.
+    kd = pool_k[table].reshape(b, npg * bs, hkv, d)
+    vd = pool_v[table].reshape(b, npg * bs, hkv, d)
+    dense = decode_attention(q, kd, vd, kv_len, block_k=bs)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(dense, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_paged_decode_attention_ignores_garbage_table_entries():
+    """Table entries at page indices >= ceil(len/bs) are garbage by contract
+    (sentinel or stale ids) — they must not leak into the output."""
+    b, hq, hkv, d, bs, npg, P = 2, 4, 2, 32, 8, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    pool_k = jax.random.normal(ks[1], (P, bs, hkv, d), jnp.float32)
+    pool_v = jax.random.normal(ks[2], (P, bs, hkv, d), jnp.float32)
+    kv_len = jnp.asarray([10, 3], jnp.int32)   # 2 pages / 1 page live
+    table = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+    out = paged_decode_attention(q, pool_k, pool_v, table, kv_len)
+    # Sentinel P beyond the live prefix, stale ids pointing anywhere: same.
+    garbled = jnp.asarray([[0, 1, P, P], [4, 9, 0, P]], jnp.int32)
+    out_g = paged_decode_attention(q, pool_k, pool_v, garbled, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(out_g), rtol=2e-5, atol=2e-5
     )
 
 

@@ -1,0 +1,471 @@
+"""PagedCachedModelEvaluator: shared-pool paged KV vs the dense contract.
+
+Claim families (ISSUE 6):
+
+* **kernel parity** — ``paged_decode_attention`` (page-table addressed pool
+  blocks) equals the jnp oracle and the dense kernel over gathered pages
+  (the hypothesis-gated sweeps live in ``tests/test_kernels.py``; this file
+  keeps one always-collected case);
+* **logits parity** — the paged evaluator's init / tick / refill logits
+  equal :class:`~repro.core.evaluators.CachedModelEvaluator`'s dense ones,
+  so every discrete search decision matches end-to-end through both async
+  engines;
+* **refcount conservation** — ``refcount[p]`` == live page-table entries
+  pointing at ``p`` (page index < ceil(len/bs)) after init, ticks, COW and
+  rollback; rollback releases suffix pages back to the pool (no leaks);
+* **copy-on-write isolation** — sibling slots share prefix pages from one
+  root prefill and split on first divergent write without corrupting each
+  other;
+* **exhaustion** — an undersized pool raises :class:`PagePoolExhaustedError`
+  at the eager boundary instead of corrupting caches;
+* **serving** — the paged :class:`~repro.serving.engine.ServingEngine`
+  emits token-identical streams to the dense one, returns every page on
+  EOS, and admits fewer prompts (not fails) when the pool is tight.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (
+    CachedModelEvaluator,
+    PagedCachedModelEvaluator,
+    SearchSpec,
+    build_searcher,
+)
+from repro.core.evaluators import SIM
+from repro.envs.token_env import TokenEnvState, make_token_env
+from repro.models import PagePoolExhaustedError, init_params
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = dataclasses.replace(
+        get_reduced("llama3-8b"), vocab_size=64, num_layers=2,
+        d_model=32, num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+    )
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _ragged_states(max_len=16, lengths=(3, 5, 9), seed=7) -> TokenEnvState:
+    n = len(lengths)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, max_len), 2, 60, jnp.int32
+    )
+    pos = jnp.arange(max_len)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    return TokenEnvState(
+        tokens=jnp.where(pos[None, :] < lengths[:, None], toks, 0),
+        length=lengths,
+        done=jnp.zeros((n,), jnp.bool_),
+    )
+
+
+def _scfg():
+    return SearchSpec(gamma=1.0, max_sim_steps=8).config
+
+
+def _pair(lm, block_size=4, num_blocks=64):
+    cfg, params = lm
+    dense = CachedModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    paged = PagedCachedModelEvaluator(
+        cfg, params, top_k=4, eos_token=1,
+        block_size=block_size, num_blocks=num_blocks,
+    )
+    return dense, paged
+
+
+def _assert_conservation(ev, aux):
+    """refcount[p] == live table entries pointing at p, with multiplicity."""
+    rc = np.asarray(aux["refcount"])
+    tab = np.asarray(aux["table"])
+    lens = np.asarray(aux["len"])
+    bs, P = ev.block_size, ev.num_blocks
+    live = np.zeros(P, np.int64)
+    for i in range(tab.shape[0]):
+        for pi in range(-(-int(lens[i]) // bs)):
+            assert tab[i, pi] < P, (
+                f"slot {i} page {pi}: live entry is sentinel/garbage"
+            )
+            live[tab[i, pi]] += 1
+    np.testing.assert_array_equal(rc, live)
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity (always-collected single case).
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernel_matches_dense_gather():
+    from repro.kernels.decode_attention.ops import (
+        decode_attention,
+        paged_decode_attention,
+    )
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+
+    b, hq, hkv, d, bs, npg, P = 4, 4, 2, 16, 8, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, hq, d), jnp.float32)
+    pool_k = jax.random.normal(ks[1], (P, bs, hkv, d), jnp.float32)
+    pool_v = jax.random.normal(ks[2], (P, bs, hkv, d), jnp.float32)
+    table = (
+        jax.random.permutation(ks[3], P)[: b * npg]
+        .reshape(b, npg).astype(jnp.int32)
+    )
+    kv_len = jnp.asarray([3, 8, 17, 32], jnp.int32)
+    out = paged_decode_attention(q, pool_k, pool_v, table, kv_len)
+    ref = paged_decode_attention_ref(q, pool_k, pool_v, table, kv_len)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+    kd = pool_k[table].reshape(b, npg * bs, hkv, d)
+    vd = pool_v[table].reshape(b, npg * bs, hkv, d)
+    dense = decode_attention(q, kd, vd, kv_len, block_k=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense), **TOL)
+    # Garbage table entries beyond ceil(len/bs) never leak into the output.
+    garbled = table.at[0, 1:].set(P)   # row 0: len 3 -> 1 live page
+    out_g = paged_decode_attention(q, pool_k, pool_v, garbled, kv_len)
+    np.testing.assert_allclose(np.asarray(out_g[0]), np.asarray(out[0]), **TOL)
+
+
+# ---------------------------------------------------------------------------
+# Logits parity with the dense cached evaluator.
+# ---------------------------------------------------------------------------
+
+
+def test_init_aux_matches_dense(lm):
+    dense, paged = _pair(lm)
+    state = _ragged_states()
+    aux_d = dense.init_aux(state, (3, 1))
+    aux_p = paged.init_aux(state, (3, 1))
+    np.testing.assert_array_equal(
+        np.asarray(aux_p["len"]), np.asarray(aux_d["len"])
+    )
+    np.testing.assert_allclose(
+        np.asarray(aux_p["pol"]["logits"], np.float32),
+        np.asarray(aux_d["pol"]["logits"], np.float32), **TOL,
+    )
+    _assert_conservation(paged, aux_p)
+
+
+def test_tick_chain_matches_dense(lm):
+    """Chained SIM ticks: identical sampled tokens and logits, refcount
+    conservation after every tick."""
+    dense, paged = _pair(lm)
+    scfg = _scfg()
+    st_d = st_p = _ragged_states()
+    n = 3
+    aux_d = dense.init_aux(st_d, (n, 1))
+    aux_p = paged.init_aux(st_p, (n, 1))
+    kind = jnp.full((n,), SIM, jnp.int32)
+    cd = cp = dict(
+        rollout_done=jnp.zeros((n,), jnp.bool_),
+        acc=jnp.zeros((n,), jnp.float32),
+        disc=jnp.ones((n,), jnp.float32),
+        steps=jnp.zeros((n,), jnp.int32),
+    )
+    for step in range(5):
+        keys = jax.random.split(jax.random.PRNGKey(step), n)
+        (st_d, r_d, _, acc, disc, stp, rdone), aux_d = dense.tick(
+            scfg, kind, jnp.zeros((n,), jnp.int32), st_d, cd["rollout_done"],
+            cd["acc"], cd["disc"], cd["steps"], keys, aux_d,
+        )
+        cd = dict(rollout_done=rdone, acc=acc, disc=disc, steps=stp)
+        (st_p, r_p, _, acc, disc, stp, rdone), aux_p = paged.tick(
+            scfg, kind, jnp.zeros((n,), jnp.int32), st_p, cp["rollout_done"],
+            cp["acc"], cp["disc"], cp["steps"], keys, aux_p,
+        )
+        cp = dict(rollout_done=rdone, acc=acc, disc=disc, steps=stp)
+        np.testing.assert_array_equal(
+            np.asarray(st_p.tokens), np.asarray(st_d.tokens),
+            err_msg=f"step {step}: paged/dense sampled different tokens",
+        )
+        np.testing.assert_allclose(
+            np.asarray(r_p, np.float32), np.asarray(r_d, np.float32), **TOL
+        )
+        np.testing.assert_array_equal(
+            np.asarray(aux_p["len"]), np.asarray(aux_d["len"])
+        )
+        np.testing.assert_allclose(
+            np.asarray(aux_p["pol"]["logits"], np.float32),
+            np.asarray(aux_d["pol"]["logits"], np.float32), **TOL,
+        )
+        _assert_conservation(paged, aux_p)
+
+
+def test_refill_rollback_matches_fresh_prefill_and_releases_pages(lm):
+    """Rollback is a page-table edit: logits equal a fresh init_aux at the
+    new path, conservation holds, and the released suffix pages rejoin the
+    pool (strictly fewer blocks in use than before the rollback)."""
+    _, paged = _pair(lm)
+    scfg = _scfg()
+    start = _ragged_states(lengths=(4, 4, 4))
+    n = 3
+    aux = paged.init_aux(start, (n, 1))
+    kind = jnp.full((n,), SIM, jnp.int32)
+    rdone = jnp.zeros((n,), jnp.bool_)
+    acc = jnp.zeros((n,), jnp.float32)
+    disc = jnp.ones((n,), jnp.float32)
+    stp = jnp.zeros((n,), jnp.int32)
+    state = start
+    for s in range(5):
+        keys = jax.random.split(jax.random.PRNGKey(11 + s), n)
+        (state, _, _, acc, disc, stp, rdone), aux = paged.tick(
+            scfg, kind, jnp.zeros((n,), jnp.int32), state, rdone, acc, disc,
+            stp, keys, aux,
+        )
+    used_before = int(np.asarray(paged.aux_blocks(aux)))
+
+    new_tokens = np.asarray(state.tokens).copy()
+    new_len = np.asarray([6, 4, 5])
+    new_tokens[0, 6:] = 0
+    new_tokens[1, 4:] = 0
+    new_tokens[2] = 0
+    new_tokens[2, :5] = [7, 11, 13, 17, 19]
+    new_state = TokenEnvState(
+        tokens=jnp.asarray(new_tokens, jnp.int32),
+        length=jnp.asarray(new_len, jnp.int32),
+        done=jnp.zeros((n,), jnp.bool_),
+    )
+    aux2 = paged.refill_aux(
+        scfg, aux, jnp.arange(n), new_state, jnp.ones((n,), jnp.bool_)
+    )
+    fresh = paged.init_aux(new_state, (n, 1))
+    np.testing.assert_array_equal(np.asarray(aux2["len"]), new_len)
+    np.testing.assert_allclose(
+        np.asarray(aux2["pol"]["logits"], np.float32),
+        np.asarray(fresh["pol"]["logits"], np.float32), **TOL,
+    )
+    _assert_conservation(paged, aux2)
+    used_after = int(np.asarray(paged.aux_blocks(aux2)))
+    assert used_after < used_before, (used_before, used_after)
+
+
+def test_refill_skips_masked_rows(lm):
+    """mask=False rows keep their cache untouched — and their pages."""
+    _, paged = _pair(lm)
+    scfg = _scfg()
+    state = _ragged_states()
+    aux = paged.init_aux(state, (3, 1))
+    shallow = TokenEnvState(
+        tokens=state.tokens,
+        length=jnp.asarray([1, 1, 1], jnp.int32),
+        done=jnp.zeros((3,), jnp.bool_),
+    )
+    mask = jnp.asarray([False, True, False])
+    aux2 = paged.refill_aux(scfg, aux, jnp.arange(3), shallow, mask)
+    np.testing.assert_array_equal(
+        np.asarray(aux2["len"]), [3, 1, 9]
+    )
+    _assert_conservation(paged, aux2)
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write prefix sharing.
+# ---------------------------------------------------------------------------
+
+
+def test_siblings_share_prefix_pages(lm):
+    """W sibling slots of one root prefill once and point at the SAME
+    prefix blocks (refcount == W), so pool use is O(roots), not O(slots)."""
+    _, paged = _pair(lm)
+    root = _ragged_states(lengths=(8,), seed=3)
+    aux = paged.init_aux(root, (1, 4))   # 1 root x 4 siblings
+    tab = np.asarray(aux["table"])
+    rc = np.asarray(aux["refcount"])
+    assert tab.shape[0] == 4
+    np.testing.assert_array_equal(tab[0, :2], tab[1, :2])
+    np.testing.assert_array_equal(tab[0, :2], tab[3, :2])
+    assert (rc[rc > 0] == 4).all()
+    assert (rc > 0).sum() == 2           # len 8 / block 4 — shared, once
+    _assert_conservation(paged, aux)
+
+
+def test_cow_isolates_diverging_siblings(lm):
+    """Two siblings writing different tokens into a shared page each get a
+    private copy; logits match the dense evaluator run with separate
+    caches, and conservation holds through the split."""
+    cfg, params = lm
+    dense, paged = _pair(lm)
+    root = _ragged_states(lengths=(8,), seed=3)
+    aux_p = paged.init_aux(root, (1, 2))
+    dup = TokenEnvState(
+        tokens=jnp.repeat(root.tokens, 2, axis=0),
+        length=jnp.repeat(root.length, 2, axis=0),
+        done=jnp.zeros((2,), jnp.bool_),
+    )
+    aux_d = dense.init_aux(dup, (2, 1))
+    toks = jnp.asarray([5, 9], jnp.int32)
+    fed = jnp.asarray([True, True])
+    aux_p2 = paged._advance(aux_p, toks, fed)
+    aux_d2 = dense._advance(aux_d, toks, fed)
+    # len 8, block 4: the write lands at position 8 — page 2, shared before
+    # the write (refcount 2 on pages 0-1 only; page 2 is fresh for both).
+    tab = np.asarray(aux_p2["table"])
+    assert tab[0, 2] != tab[1, 2], "diverging siblings must not share page 2"
+    np.testing.assert_allclose(
+        np.asarray(aux_p2["pol"]["logits"], np.float32),
+        np.asarray(aux_d2["pol"]["logits"], np.float32), **TOL,
+    )
+    _assert_conservation(paged, aux_p2)
+    # Second write: position 9, offset 1 into the now-private page — the
+    # COW case proper (write into a shared partial page never happens here
+    # because page 2 was allocated privately; force it by re-sharing).
+    aux_p3 = paged._advance(aux_p2, jnp.asarray([7, 7], jnp.int32), fed)
+    aux_d3 = dense._advance(aux_d2, jnp.asarray([7, 7], jnp.int32), fed)
+    np.testing.assert_allclose(
+        np.asarray(aux_p3["pol"]["logits"], np.float32),
+        np.asarray(aux_d3["pol"]["logits"], np.float32), **TOL,
+    )
+    _assert_conservation(paged, aux_p3)
+
+
+def test_cow_on_shared_partial_page(lm):
+    """A slot writing into a partial page it SHARES (refcount > 1) copies
+    the block first: the sibling's view of the old block is untouched."""
+    _, paged = _pair(lm)
+    root = _ragged_states(lengths=(6,), seed=5)   # 6 = 1.5 pages of 4
+    aux = paged.init_aux(root, (1, 2))
+    rc0 = np.asarray(aux["refcount"])
+    assert (rc0[rc0 > 0] == 2).all()              # pages 0,1 both shared
+    # Advance ONLY slot 0: it writes position 6 = offset 2 of shared page 1
+    # -> COW. Slot 1's table must keep the original block.
+    tab0 = np.asarray(aux["table"]).copy()
+    aux2 = paged._advance(
+        aux, jnp.asarray([5, 0], jnp.int32), jnp.asarray([True, False])
+    )
+    tab2 = np.asarray(aux2["table"])
+    assert tab2[0, 1] != tab0[0, 1], "writer should have COW'd page 1"
+    assert tab2[1, 1] == tab0[1, 1], "non-writer must keep the shared block"
+    np.testing.assert_array_equal(np.asarray(aux2["len"]), [7, 6])
+    _assert_conservation(paged, aux2)
+
+
+# ---------------------------------------------------------------------------
+# Pool exhaustion.
+# ---------------------------------------------------------------------------
+
+
+def test_pool_exhaustion_raises(lm):
+    cfg, params = lm
+    tiny = PagedCachedModelEvaluator(
+        cfg, params, top_k=4, eos_token=1, block_size=4, num_blocks=2,
+    )
+    with pytest.raises(PagePoolExhaustedError, match="num_blocks=2"):
+        tiny.init_aux(_ragged_states(), (3, 1))
+
+
+def test_advance_exhaustion_latches_and_raises(lm):
+    cfg, params = lm
+    tiny = PagedCachedModelEvaluator(
+        cfg, params, top_k=4, eos_token=1, block_size=4, num_blocks=2,
+    )
+    aux = tiny.init_aux(_ragged_states(lengths=(8,), seed=3), (1, 1))
+    aux2 = tiny._advance(aux, jnp.asarray([5], jnp.int32), jnp.asarray([True]))
+    with pytest.raises(PagePoolExhaustedError):
+        tiny.check_exhausted(aux2)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: both async engines, bit-identical search decisions.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("batch", [0, 2])
+def test_paged_search_matches_dense_end_to_end(lm, batch):
+    cfg, params = lm
+    env = make_token_env(
+        cfg, params, jnp.asarray([3, 5, 7], jnp.int32), max_len=14,
+        top_k=4, eos_token=1,
+    )
+    dense, paged = _pair(lm, num_blocks=96)
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", batch=batch, num_simulations=10,
+        wave_size=3, max_depth=5, max_sim_steps=5, max_width=4, gamma=1.0,
+    )
+    key = jax.random.PRNGKey(2)
+    if batch:
+        roots = jax.vmap(env.init)(jax.random.split(key, batch))
+        keys = jax.random.split(jax.random.PRNGKey(1), batch)
+    else:
+        roots, keys = env.init(key), key
+    res_d = build_searcher(env, spec, evaluator=dense)(roots, keys)
+    res_p = build_searcher(env, spec, evaluator=paged)(roots, keys)
+    for f in ("action", "root_n", "tree_size", "ticks", "overflowed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_d, f)), np.asarray(getattr(res_p, f)),
+            err_msg=f"field {f}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(res_d.root_v), np.asarray(res_p.root_v), **TOL
+    )
+
+
+def test_trace_mode_reports_blocks_in_use(lm):
+    """Trace snapshots carry the pool working set — the number the
+    batch-ceiling benchmark rows are derived from."""
+    from repro.core.async_search import run_async_search
+
+    cfg, params = lm
+    env = make_token_env(
+        cfg, params, jnp.asarray([3, 5, 7], jnp.int32), max_len=14,
+        top_k=4, eos_token=1,
+    )
+    _, paged = _pair(lm, num_blocks=96)
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", num_simulations=10, wave_size=3,
+        max_depth=5, max_sim_steps=5, max_width=4, gamma=1.0,
+    )
+    fn = jax.jit(functools.partial(
+        run_async_search, env, spec.config, trace_ticks=40, evaluator=paged,
+    ))
+    _, trace = fn(env.init(jax.random.PRNGKey(2)), jax.random.PRNGKey(2))
+    blocks = np.asarray(trace.blocks_in_use)
+    alive = np.asarray(trace.alive)
+    assert blocks.shape[0] == alive.shape[0]
+    assert blocks[alive].max() > 0
+    assert blocks[alive].max() <= paged.num_blocks
+
+
+# ---------------------------------------------------------------------------
+# Serving engine.
+# ---------------------------------------------------------------------------
+
+
+def test_serving_paged_matches_dense(lm):
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg, params = lm
+    prompts = [[3, 5, 7], [11, 13], [2, 9, 4, 6, 8], [17, 19, 23, 29]]
+    dense = ServingEngine(
+        cfg, params, ServeConfig(batch_slots=3, max_len=24, eos_token=1)
+    )
+    paged = ServingEngine(
+        cfg, params,
+        ServeConfig(batch_slots=3, max_len=24, eos_token=1,
+                    paged=True, block_size=4),
+    )
+    out_d = dense.run(prompts, max_ticks=64)
+    out_p = paged.run(prompts, max_ticks=64)
+    assert out_d == out_p
+    assert paged.blocks_in_use() == 0, "pages leaked after all slots freed"
+
+
+def test_serving_tight_pool_admits_fewer(lm):
+    from repro.serving.engine import ServeConfig, ServingEngine
+
+    cfg, params = lm
+    eng = ServingEngine(
+        cfg, params,
+        ServeConfig(batch_slots=3, max_len=24, eos_token=1,
+                    paged=True, block_size=4, num_blocks=3),
+    )
+    # 1 + 1 + 2 pages wanted, 3 in the pool: the third prompt must wait.
+    slots = eng.add_requests([[3, 5, 7], [11, 13], [2, 9, 4, 6, 8]])
+    assert slots[0] is not None
+    assert slots.count(None) >= 1, "tight pool must defer, not crash"
