@@ -22,10 +22,19 @@ Two claims under test:
   prefix pages (copy-on-write), so the same HBM budget admits strictly more
   slots — the ``paged_ceiling`` rows derive that batch ceiling.
 
+* ``FrontierModelEvaluator`` (this PR): EXPAND ticks score every candidate
+  child in one tree-batched ``decode_frontier`` forward and snapshot the
+  whole frontier into slot aux, so sibling/child refills are answered with
+  ZERO model forwards.  The ``frontier_eval`` rows sweep the candidate
+  width ``A`` against a MATCHED cached baseline (same env top-K / tree
+  width) and report the absorbed refill hits from the trace counter.
+
 Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` /
 ``paged_eval_d{d}_B{n}`` with derived searches/sec and per-tick µs,
 ``cached_speedup_d{d}_B{n}``, ``paged_ceiling_d{d}_B{n}`` (peak pool blocks
-→ max B·W at the dense layout's HBM budget), plus the PR-4
+→ max B·W at the dense layout's HBM budget),
+``frontier_eval_d{d}_B{n}_A{a}`` / ``frontier_speedup_d{d}_B{n}_A{a}``
+(frontier vs matched-width cached decode), plus the PR-4
 ``rollout_eval`` baseline at the first depth.  Forward/decode counting is
 asserted in ``tests/test_facade.py`` / ``tests/test_cached_evaluator.py``;
 this file measures the wall-clock consequence.  ``benchmarks/run.py`` dumps
@@ -47,6 +56,7 @@ import numpy as np
 from repro.configs import get_reduced
 from repro.core import (
     CachedModelEvaluator,
+    FrontierModelEvaluator,
     ModelEvaluator,
     PagedCachedModelEvaluator,
     SearchSpec,
@@ -61,6 +71,7 @@ BATCH_SIZES = (1, 4)
 DEPTHS = (8, 64)
 PROMPT = (3, 5, 7)
 BLOCK_SIZE = 8
+FRONTIER_WIDTHS = (4, 16)
 
 
 def _tiny_lm(vocab: int = 64):
@@ -78,6 +89,7 @@ def run(
     top_k: int = 4,
     depths: tuple[int, ...] = DEPTHS,
     paged: bool = True,
+    frontier_widths: tuple[int, ...] = FRONTIER_WIDTHS,
     records: list | None = None,
 ) -> list[str]:
     cfg, params = _tiny_lm()
@@ -205,6 +217,82 @@ def run(
                     f"paged_ceiling_d{depth}_B{B}", 0.0,
                     f"{peak} blocks peak; {max_slots} slots fit the "
                     f"dense budget ({slots} dense)",
+                ))
+
+            # Frontier-speculative expansion: the candidate width A is the
+            # env's top_k AND the tree's max_width, so each A gets its own
+            # env/spec pair plus a MATCHED cached baseline — comparing a
+            # frontier run at A=16 against the top-level cached row at
+            # top_k=4 would conflate candidate width with tree shape
+            # (wider trees tick more).  The trace run reports how many
+            # refills the frontier snapshot absorbed (zero-forward hits).
+            from repro.core.async_search import run_async_search
+            from repro.core.batched_async_search import (
+                run_async_search_batched,
+            )
+
+            engine = run_async_search_batched if B > 1 else run_async_search
+            for a in frontier_widths:
+                if a == top_k:
+                    env_a, bspec_a = env, bspec
+                    t_base, ticks_base = t_c, ticks_c
+                else:
+                    env_a = make_token_env(
+                        cfg, params, prompt, max_len=max_len, top_k=a,
+                        eos_token=1,
+                    )
+                    spec_a = SearchSpec(
+                        algo="wu_uct", engine="async",
+                        num_simulations=num_simulations,
+                        wave_size=wave_size, max_depth=depth,
+                        max_sim_steps=depth, max_width=a, gamma=1.0,
+                    )
+                    bspec_a = spec_a._replace(batch=B) if B > 1 else spec_a
+                    cached_a = CachedModelEvaluator(
+                        cfg, params, top_k=a, eos_token=1
+                    )
+                    t_base, ticks_base = bench(
+                        build_searcher(env_a, bspec_a, evaluator=cached_a)
+                    )
+                frontier_ev = FrontierModelEvaluator(
+                    cfg, params, top_k=a, eos_token=1
+                )
+                t_f, ticks_f = bench(
+                    build_searcher(env_a, bspec_a, evaluator=frontier_ev)
+                )
+                fn = jax.jit(functools.partial(
+                    engine, env_a, bspec_a.config,
+                    trace_ticks=4 * num_simulations, evaluator=frontier_ev,
+                ))
+                _, ftrace = fn(roots, rngs)
+                hits = int(np.asarray(ftrace.frontier_hits)[-1].sum())
+                per_tick = t_f / max(ticks_f, 1)
+                if records is not None:
+                    records.append({
+                        "name": f"frontier_eval_d{depth}_B{B}_A{a}",
+                        "kind": "frontier_decode", "batch": B,
+                        "depth": depth, "top_k": a, "seconds": t_f,
+                        "searches_per_sec": B / t_f, "ticks": ticks_f,
+                        "us_per_tick": per_tick * 1e6,
+                        "frontier_hits": hits,
+                        "expansions": B * num_simulations,
+                    })
+                    records.append({
+                        "name": f"frontier_speedup_d{depth}_B{B}_A{a}",
+                        "kind": "frontier_speedup", "batch": B,
+                        "depth": depth, "top_k": a,
+                        "speedup": t_base / t_f,
+                        "cached_seconds": t_base,
+                        "cached_ticks": ticks_base,
+                    })
+                rows.append(row(
+                    f"frontier_eval_d{depth}_B{B}_A{a}", t_f,
+                    f"{B / t_f:.2f} searches/s; {per_tick * 1e6:.0f} "
+                    f"us/tick; {hits} refill hits",
+                ))
+                rows.append(row(
+                    f"frontier_speedup_d{depth}_B{B}_A{a}", 0.0,
+                    f"{t_base / t_f:.2f}x vs cached decode at A={a}",
                 ))
 
             if di == 0:

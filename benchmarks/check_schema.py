@@ -9,7 +9,14 @@ against the committed baseline and fails on:
 
 * kinds present in the baseline but missing from the fresh run (a bench
   path stopped producing them);
-* per-kind field sets that no longer cover the baseline's fields.
+* per-kind field sets that no longer cover the baseline's fields;
+* known kinds whose rows drop a REQUIRED field (``REQUIRED_FIELDS``) —
+  downstream consumers read these by name (e.g.
+  ``serving.search_service`` sizes paged pools from
+  ``batch_ceiling.ceiling_ratio``; the frontier rows' ``top_k`` /
+  ``frontier_hits`` feed the hit-rate comparison), so they are pinned
+  explicitly rather than inferred from whatever the baseline happened
+  to contain.
 
 Fresh runs may ADD kinds/fields (that is how baselines grow); they may not
 lose any.  Usage::
@@ -23,6 +30,18 @@ from __future__ import annotations
 import argparse
 import json
 import sys
+
+
+# Fields that rows of a kind must ALWAYS carry, independent of what the
+# committed baseline contains — these are read by name elsewhere in the
+# repo, so losing one is a break even if the baseline predates it.
+REQUIRED_FIELDS: dict[str, set[str]] = {
+    "batch_ceiling": {"ceiling_ratio", "peak_blocks", "block_size"},
+    "frontier_decode": {
+        "top_k", "frontier_hits", "searches_per_sec", "us_per_tick",
+    },
+    "frontier_speedup": {"top_k", "speedup", "cached_seconds"},
+}
 
 
 def field_sets(rows: list[dict]) -> dict[str, set[str]]:
@@ -43,6 +62,15 @@ def check(baseline: dict, fresh: dict) -> list[str]:
         lost = fields - new[kind]
         if lost:
             errors.append(f"kind {kind!r} lost fields {sorted(lost)}")
+    for kind, required in sorted(REQUIRED_FIELDS.items()):
+        if kind not in new:
+            continue
+        missing = required - new[kind]
+        if missing:
+            errors.append(
+                f"kind {kind!r} is missing required fields "
+                f"{sorted(missing)}"
+            )
     if not fresh["rows"]:
         errors.append("fresh run produced no rows")
     return errors

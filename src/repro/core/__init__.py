@@ -19,8 +19,10 @@ from .api import SearchSpec, as_search_config, build_searcher, make_config
 from .evaluators import (
     CachedModelEvaluator,
     Evaluator,
+    FrontierModelEvaluator,
     ModelEvaluator,
     PagedCachedModelEvaluator,
+    PagedFrontierModelEvaluator,
     RolloutEvaluator,
 )
 from .policies import PolicyConfig
@@ -41,6 +43,8 @@ __all__ = [
     "ModelEvaluator",
     "CachedModelEvaluator",
     "PagedCachedModelEvaluator",
+    "FrontierModelEvaluator",
+    "PagedFrontierModelEvaluator",
     # configs / results / trees
     "AsyncTickTrace",
     "PolicyConfig",

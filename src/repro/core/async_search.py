@@ -56,16 +56,22 @@ class AsyncTickTrace(NamedTuple):
     state_len: Optional[jax.Array] = None  # i32[K, W] slot token prefix length
     cache_len: Optional[jax.Array] = None  # i32[K, W] evaluator cache depth
     blocks_in_use: Optional[jax.Array] = None  # i32[K] paged-pool working set
+    frontier_hits: Optional[jax.Array] = None  # i32[K] cumulative refill hits
 
 
-def tick_snapshot(carry, alive, cache_len=None, blocks=None) -> AsyncTickTrace:
+def tick_snapshot(
+    carry, alive, cache_len=None, blocks=None, frontier_hits=None
+) -> AsyncTickTrace:
     """One :class:`AsyncTickTrace` row from a master-loop carry.
 
     Both async engines carry ``(tree, slots, rng, t_launch, t_done, ...)``,
     so the trace schema is defined once here — single-tree ``Tree``/slots and
     ``BatchedTree``/batched slots expose the same field names.  ``cache_len``
     is the evaluator's per-slot cache depth (``evaluator.aux_len``), already
-    reshaped to the slot table's layout by the engine.
+    reshaped to the slot table's layout by the engine; ``frontier_hits`` is
+    the engine's cumulative count of refills answered from the evaluator's
+    frontier cache (WU-UCT's ``O_s`` accounting absorbing speculative
+    visits — the engine never dispatched a forward for them).
     """
     tree, slots = carry[0], carry[1]
     return AsyncTickTrace(
@@ -74,6 +80,7 @@ def tick_snapshot(carry, alive, cache_len=None, blocks=None) -> AsyncTickTrace:
         state_len=getattr(slots.state, "length", None),
         cache_len=cache_len,
         blocks_in_use=blocks,
+        frontier_hits=frontier_hits,
     )
 
 
@@ -154,15 +161,15 @@ def run_async_search(
     # ------------------------------------------------------------------
     def refill(carry):
         """Fill FREE slots with fresh selections (Algorithm 1 main loop)."""
-        tree, slots, rng, t_launch, t_done, aux = carry
+        tree, slots, rng, t_launch, t_done, aux, fr_hits = carry
 
         def body(j, c):
-            tree, slots, rng, t_launch, t_done, aux = c
+            tree, slots, rng, t_launch, t_done, aux, fr_hits = c
             rng, k_t, k_e = jax.random.split(rng, 3)
             want = (slots.kind[j] == FREE) & (t_launch < T)
 
             def do_fill(op):
-                tree, slots, t_launch, t_done, aux = op
+                tree, slots, t_launch, t_done, aux, fr_hits = op
                 node = traverse(tree, k_t, cfg, use_kernel)
                 kids = tree.children[node]
                 n_tried = jnp.sum((kids >= 0).astype(jnp.int32))
@@ -194,7 +201,7 @@ def run_async_search(
                 # Re-sync the evaluator's slot cache with the new path's
                 # prefix (no-op for stateless evaluators; terminal hits
                 # launch nothing, so their cache stays untouched).
-                aux2 = evaluator.refill_aux(
+                aux2, hit = evaluator.refill_aux(
                     cfg, aux, jnp.reshape(j, (1,)),
                     jax.tree.map(lambda x: x[None], parent_state),
                     jnp.reshape(jnp.logical_not(is_term), (1,)),
@@ -219,13 +226,14 @@ def run_async_search(
                     t_launch + 1,
                     t_done + is_term.astype(jnp.int32),
                     aux2,
+                    fr_hits + jnp.sum(hit).astype(jnp.int32),
                 )
 
-            tree, slots, t_launch, t_done, aux = jax.lax.cond(
+            tree, slots, t_launch, t_done, aux, fr_hits = jax.lax.cond(
                 want, do_fill, lambda op: op,
-                (tree, slots, t_launch, t_done, aux),
+                (tree, slots, t_launch, t_done, aux, fr_hits),
             )
-            return tree, slots, rng, t_launch, t_done, aux
+            return tree, slots, rng, t_launch, t_done, aux, fr_hits
 
         return jax.lax.fori_loop(0, W, body, carry)
 
@@ -287,21 +295,23 @@ def run_async_search(
         return carry[4] < T          # t_done
 
     def master_iter(carry):
-        tree, slots, rng, t_launch, t_done, ticks, max_o, aux = carry
+        tree, slots, rng, t_launch, t_done, ticks, max_o, aux, fr_hits = carry
         rng, k_tick = jax.random.split(rng)
-        tree, slots, rng, t_launch, t_done, aux = refill(
-            (tree, slots, rng, t_launch, t_done, aux)
+        tree, slots, rng, t_launch, t_done, aux, fr_hits = refill(
+            (tree, slots, rng, t_launch, t_done, aux, fr_hits)
         )
         max_o = jnp.maximum(max_o, tree.O[0])
         slots, r_edge, done_edge, aux = tick(slots, k_tick, aux)
         tree, slots, t_done = settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
-        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux
+        return (
+            tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux, fr_hits
+        )
 
     init = (
         tree0, slot_state0(), rng, jnp.int32(0), jnp.int32(0), jnp.int32(0),
-        jnp.float32(0.0), evaluator.init_aux(root_state, (W,)),
+        jnp.float32(0.0), evaluator.init_aux(root_state, (W,)), jnp.int32(0),
     )
     if trace_ticks > 0:
         # Same program as the while_loop below (master_iter applied while
@@ -315,13 +325,14 @@ def run_async_search(
             return new, tick_snapshot(
                 new, alive, evaluator.aux_len(new[7]),
                 evaluator.aux_blocks(new[7]),
+                frontier_hits=new[8],
             )
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
-        tree, slots, _, _, _, ticks, max_o, _ = final
+        tree, slots, _, _, _, ticks, max_o, _, _ = final
     else:
         trace = None
-        tree, slots, _, _, _, ticks, max_o, _ = jax.lax.while_loop(
+        tree, slots, _, _, _, ticks, max_o, _, _ = jax.lax.while_loop(
             cond, master_iter, init
         )
 

@@ -156,7 +156,7 @@ def run_async_search_batched(
         traversal level."""
 
         def body(j, c):
-            tree, slots, rng, t_launch, t_done, aux = c
+            tree, slots, rng, t_launch, t_done, aux, fr_hits = c
             rng, k_t, k_e = _split_each(rng, 3)
             want = (slots.kind[:, j] == FREE) & (t_launch < T)
 
@@ -187,10 +187,11 @@ def run_async_search_batched(
             parent_state = btree.get_state(tree, nodes)
             # Re-sync the evaluator's slot caches: slot column j of every
             # tree lives at flat row b·W + j of the aux pool.
-            aux = evaluator.refill_aux(
+            aux, hit = evaluator.refill_aux(
                 cfg, aux, bidx * W + j, parent_state,
                 want & jnp.logical_not(is_term),
             )
+            fr_hits = fr_hits + hit.astype(jnp.int32)
             slots = set_slot(
                 slots,
                 j,
@@ -208,7 +209,7 @@ def run_async_search_batched(
             )
             t_launch = t_launch + want.astype(jnp.int32)
             t_done = t_done + (want & is_term).astype(jnp.int32)
-            return tree, slots, rng, t_launch, t_done, aux
+            return tree, slots, rng, t_launch, t_done, aux, fr_hits
 
         return jax.lax.fori_loop(0, W, body, carry)
 
@@ -279,17 +280,19 @@ def run_async_search_batched(
         return carry[4] < T          # t_done, per tree
 
     def master_iter(carry):
-        tree, slots, rng, t_launch, t_done, ticks, max_o, aux = carry
+        tree, slots, rng, t_launch, t_done, ticks, max_o, aux, fr_hits = carry
         rng, k_tick = _split_each(rng, 2)
-        tree, slots, rng, t_launch, t_done, aux = refill(
-            (tree, slots, rng, t_launch, t_done, aux)
+        tree, slots, rng, t_launch, t_done, aux, fr_hits = refill(
+            (tree, slots, rng, t_launch, t_done, aux, fr_hits)
         )
         max_o = jnp.maximum(max_o, tree.O[:, 0])
         slots, r_edge, done_edge, aux = tick(slots, k_tick, aux)
         tree, slots, t_done = settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
-        return tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux
+        return (
+            tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux, fr_hits
+        )
 
     def step(carry):
         """One master tick with finished trees frozen — the same per-lane
@@ -317,13 +320,18 @@ def run_async_search_batched(
             )
         )
         new = master_iter((carry[0], masked) + carry[2:])
-        return _freeze_done(alive, new[:-1], carry[:-1]) + (new[-1],)
+        # aux rides outside the freeze (above); the per-tree frontier-hit
+        # counter rides after it and freezes with a plain where — its hits
+        # are already masked by ``want``, so dead lanes never advance.
+        return _freeze_done(alive, new[:-2], carry[:-2]) + (
+            new[-2], jnp.where(alive, new[-1], carry[-1]),
+        )
 
     init = (
         tree0, slot_state0(), rngs,
         jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
         jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
-        evaluator.init_aux(root_states, (B, W)),
+        evaluator.init_aux(root_states, (B, W)), jnp.zeros((B,), jnp.int32),
     )
     if trace_ticks > 0:
         def scan_body(carry, _):
@@ -333,14 +341,15 @@ def run_async_search_batched(
             if ev_len is not None:
                 ev_len = ev_len.reshape(B, W)
             return new, tick_snapshot(
-                new, alive, ev_len, evaluator.aux_blocks(new[7])
+                new, alive, ev_len, evaluator.aux_blocks(new[7]),
+                frontier_hits=new[8],
             )
 
         final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
-        tree, slots, _, _, _, ticks, max_o, _ = final
+        tree, slots, _, _, _, ticks, max_o, _, _ = final
     else:
         trace = None
-        tree, slots, _, _, _, ticks, max_o, _ = jax.lax.while_loop(
+        tree, slots, _, _, _, ticks, max_o, _, _ = jax.lax.while_loop(
             lambda c: jnp.any(cond(c)), step, init
         )
 

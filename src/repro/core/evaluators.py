@@ -109,7 +109,12 @@ class Evaluator:
       ``prefix[:-1]`` and broadcast over the trailing slot axis);
     * ``refill_aux(cfg, aux, rows, new_state, mask)`` — re-sync aux rows
       ``rows`` (flat ``i32[R]`` indices) with the freshly assigned
-      ``new_state`` (leaves lead with ``[R]``) where ``mask`` holds;
+      ``new_state`` (leaves lead with ``[R]``) where ``mask`` holds.
+      Returns ``(aux, hits)`` where ``hits`` (``bool``, shaped like
+      ``rows``) flags rows served entirely from a speculative frontier
+      cache — no model forward dispatched (always ``False`` for evaluators
+      without a frontier cache; the engines surface the count in trace
+      mode as ``frontier_hits``);
     * ``aux_len(aux)`` — the per-slot cache depth vector for trace-mode
       invariant checking (``None`` when the evaluator carries no cache).
     """
@@ -120,11 +125,18 @@ class Evaluator:
         del root_states, prefix
         return ()
 
-    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
-        del cfg, rows, new_state, mask
-        return aux
+    def refill_aux(self, cfg, aux, rows, new_state, mask):
+        del cfg, new_state, mask
+        return aux, jnp.zeros(jnp.shape(rows), jnp.bool_)
 
     def aux_len(self, aux) -> Optional[jax.Array]:
+        del aux
+        return None
+
+    def aux_last_logits(self, aux) -> Optional[jax.Array]:
+        """Most recent per-slot policy logits ``[N, V]``, when the evaluator
+        surfaces them on slot-aux (policy-prior groundwork; the frontier
+        cache reads the same slab).  ``None`` for logit-free evaluators."""
         del aux
         return None
 
@@ -369,6 +381,23 @@ class ModelEvaluator(Evaluator):
         )
         return out, token
 
+    def init_aux(self, root_states: Pytree, prefix: tuple) -> Pytree:
+        """Per-slot ``last_logits`` slab — the logits each tick computes are
+        kept on aux instead of discarded after value extraction."""
+        del root_states
+        n = 1
+        for p in prefix:
+            n *= int(p)
+        return {
+            "last_logits": jnp.zeros((n, self.model_cfg.vocab_size),
+                                     jnp.float32)
+        }
+
+    def aux_last_logits(self, aux) -> Optional[jax.Array]:
+        if isinstance(aux, dict) and "last_logits" in aux:
+            return aux["last_logits"]
+        return None
+
     def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
              aux=()):
         # --- the one batched forward of this master tick -------------------
@@ -385,6 +414,11 @@ class ModelEvaluator(Evaluator):
             cfg, kind, act, state, rollout_done, acc, disc, steps, keys, pol,
             rew,
         )
+        if isinstance(aux, dict) and "last_logits" in aux:
+            aux = dict(
+                aux,
+                last_logits=pol.astype(aux["last_logits"].dtype),
+            )
         return out, aux
 
     def value(self, state: Pytree) -> jax.Array:
@@ -604,13 +638,16 @@ class CachedModelEvaluator(ModelEvaluator):
         return aux
 
     def _rollback_targets(self, sub, new_state, mask):
-        """Per-row (start, target, tokens) for a refill rollback.
+        """Per-row (start, target, tokens, common) for a refill rollback.
 
-        ``start`` is the common prefix of the cached tokens and the new
-        path's tokens, capped so the final prompt token is always re-decoded
-        (the stored logits must be the NEW position's logits); the
-        re-prefill fallback is the common == 0 degenerate.  Unmasked rows
-        collapse to start == target == their current length (no-op).
+        ``common`` is the (uncapped) shared prefix of the cached tokens and
+        the new path's tokens; ``start`` caps it so the final prompt token
+        is always re-decoded (the stored logits must be the NEW position's
+        logits) — the frontier evaluators compare against the uncapped
+        ``common`` to recognize rows whose forced re-decode exists only to
+        regenerate logits the frontier cache already holds.  The re-prefill
+        fallback is the common == 0 degenerate.  Unmasked rows collapse to
+        start == target == their current length (no-op).
         """
         s_max = sub["tokens"].shape[-1]
         pos = jnp.arange(s_max)
@@ -624,17 +661,17 @@ class CachedModelEvaluator(ModelEvaluator):
         start = jnp.where(mask, start, old_len)
         target = jnp.where(mask, l_new, old_len)
         tokens = jnp.where(mask[:, None], new_state.tokens, sub["tokens"])
-        return start, target, tokens
+        return start, target, tokens, common
 
-    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
+    def refill_aux(self, cfg, aux, rows, new_state, mask):
         del cfg
         sub = self._take_rows(aux, rows)
         r = rows.shape[0]
         s_max = sub["tokens"].shape[-1]
-        start, target, tokens = self._rollback_targets(sub, new_state, mask)
+        start, target, tokens, _ = self._rollback_targets(sub, new_state, mask)
         sub = dict(sub, tokens=tokens, len=start)
         sub = self._catch_up(sub, target, r, s_max)
-        return self._put_rows(aux, rows, sub)
+        return self._put_rows(aux, rows, sub), jnp.zeros((r,), jnp.bool_)
 
     def _catch_up(self, sub, target, r, s_max):
         """Re-decode each row's divergent suffix in batched ragged chunks.
@@ -682,6 +719,9 @@ class CachedModelEvaluator(ModelEvaluator):
 
     def aux_len(self, aux) -> Optional[jax.Array]:
         return aux["len"]
+
+    def aux_last_logits(self, aux) -> Optional[jax.Array]:
+        return aux["pol"]["logits"]
 
     def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
              aux=()):
@@ -841,11 +881,10 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
             "rew": branch(aux["rew"], sub["rew"]),
         }
 
-    def _advance(self, aux, token, fed):
-        """Feed one token per slot: COW resolution → allocation → one batched
-        ``paged_decode_step`` per model.
+    def _page_write(self, table, refcount, oom, idx, pos, write):
+        """Resolve the physical target for one K/V row write per slot.
 
-        Page bookkeeping per fed slot writing at position ``len``:
+        Page bookkeeping per ``write`` slot targeting position ``pos``:
 
         * ``off == 0`` — the slot is entering a fresh logical page: allocate
           a block and point the table at it;
@@ -853,31 +892,27 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
           copy-on-write: allocate, copy the block, decref the shared one;
         * otherwise the slot owns the block exclusively and writes in place.
 
-        Non-fed slots never write (sentinel target, drop-mode scatter) and
-        attend only their existing ``len`` positions, so a masked slot can
-        never corrupt a page — shared or not.  Allocation failure latches
-        ``oom`` and skips the write.
+        Non-write slots never touch the pool (sentinel target, drop-mode
+        scatter), so a masked slot can never corrupt a page — shared or
+        not.  Allocation failure latches ``oom`` and skips the write.
+
+        Returns ``(table, refcount, oom, wb, off, copy_src, copy_dst)``:
+        ``wb`` is the write block per slot (pool size == "no write");
+        ``copy_src``/``copy_dst`` drive the per-branch COW pool copy
+        (``dst == pool size`` drops).
         """
         from ..models import alloc_blocks
 
-        idx = jnp.arange(token.shape[0])
-        s_max = aux["tokens"].shape[-1]
         bs = self.block_size
-        length = aux["len"]
-        safe = jnp.minimum(length, s_max - 1)
-        prev = aux["tokens"][idx, safe]
-        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
-
-        table, refcount, oom = aux["table"], aux["refcount"], aux["oom"]
         p = refcount.shape[0]
-        bi = safe // bs
-        off = safe % bs
+        bi = pos // bs
+        off = pos % bs
         cur = table[idx, bi]
         cur_c = jnp.clip(cur, 0, p - 1)
         started = off > 0               # page already holds this slot's rows
         shared = refcount[cur_c] > 1
-        need_new = fed & (~started | shared)
-        is_cow = fed & started & shared
+        need_new = write & (~started | shared)
+        is_cow = write & started & shared
         blocks, refcount, n_fail = alloc_blocks(refcount, need_new)
         got = need_new & (blocks < p)
         oom = oom + n_fail
@@ -885,12 +920,28 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
             jnp.where(is_cow & got, cur_c, p)
         ].add(-1, mode="drop")
         table = table.at[idx, bi].set(jnp.where(got, blocks, cur))
-        ok = fed & jnp.where(need_new, got, True)
+        ok = write & jnp.where(need_new, got, True)
         wb = jnp.where(ok, jnp.clip(table[idx, bi], 0, p - 1), p)
-        att_len = length + jnp.where(ok, 1, 0)
-
         copy_src = jnp.where(is_cow & got, cur_c, 0)
         copy_dst = jnp.where(is_cow & got, blocks, p)
+        return table, refcount, oom, wb, off, copy_src, copy_dst
+
+    def _advance(self, aux, token, fed):
+        """Feed one token per slot: COW resolution → allocation → one batched
+        ``paged_decode_step`` per model (bookkeeping in :meth:`_page_write`).
+        """
+        idx = jnp.arange(token.shape[0])
+        s_max = aux["tokens"].shape[-1]
+        length = aux["len"]
+        safe = jnp.minimum(length, s_max - 1)
+        prev = aux["tokens"][idx, safe]
+        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
+
+        table, refcount, oom, wb, off, copy_src, copy_dst = self._page_write(
+            aux["table"], aux["refcount"], aux["oom"], idx, safe, fed
+        )
+        p = refcount.shape[0]
+        att_len = length + jnp.where(wb < p, 1, 0)
 
         out = dict(
             tokens=tokens,
@@ -996,15 +1047,17 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
         self._maybe_raise(aux["oom"])
         return aux
 
-    def refill_aux(self, cfg, aux, rows, new_state, mask) -> Pytree:
-        """Rollback = page-table edit; catch-up = token-by-token decode.
+    def refill_aux(self, cfg, aux, rows, new_state, mask):
+        """Rollback = page-table edit; catch-up = batched ragged chunks.
 
         Suffix pages wholly beyond the common prefix are refcount-released
         (no cache rows rewritten); the retained partial boundary page is
         still shared, so the first catch-up write into it copies-on-write.
-        The divergent suffix re-decodes through :meth:`_advance` (each step
-        needs the previous step's page bookkeeping, so the dense chunked
-        catch-up does not apply).
+        The divergent suffix then re-decodes through the SAME chunked
+        ``models.decode_chunk`` path as the dense evaluator
+        (:meth:`_paged_catch_up`): the whole suffix's page-allocation
+        schedule is resolved up front, the rows' pages are materialized
+        dense, and only the written (now-private) pages scatter back.
         """
         del cfg
         from ..models import release_pages
@@ -1012,23 +1065,612 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
         sub = self._take_rows(aux, rows)
         r = rows.shape[0]
         s_max = sub["tokens"].shape[-1]
-        start, target, tokens = self._rollback_targets(sub, new_state, mask)
+        start, target, tokens, _ = self._rollback_targets(sub, new_state, mask)
         bs = self.block_size
         lo = (start + bs - 1) // bs
         hi = (sub["len"] + bs - 1) // bs
         refcount = release_pages(sub["refcount"], sub["table"], lo, hi)
         sub = dict(sub, tokens=tokens, len=start, refcount=refcount)
+        sub = self._paged_catch_up(sub, target, r, s_max)
+        return self._put_rows(aux, rows, sub), jnp.zeros((r,), jnp.bool_)
 
-        def cond(c):
-            return jnp.any(c["len"] < target)
+    def _paged_catch_up(self, sub, target, r, s_max):
+        """Chunked divergent-suffix re-decode over paged rows.
 
-        def body(c):
-            feed = c["len"] < target
-            tok = c["tokens"][jnp.arange(r), jnp.minimum(c["len"], s_max - 1)]
-            return self._advance(c, tok, feed)
+        Page writes no longer interleave with decode steps: every page the
+        suffix will touch is resolved FIRST (boundary COW for rows
+        re-entering a shared partial page, then one fresh block per whole
+        suffix page), which makes all written pages private — so the
+        catch-up itself can run as the dense evaluator's batched ragged
+        ``decode_chunk`` loop over a dense gather of each row's pages, and
+        the written pages scatter back afterwards.  Pages whose allocation
+        failed stay masked out of the scatter (shared blocks are never
+        corrupted); the failure latches ``oom`` as usual.
 
-        sub = jax.lax.while_loop(cond, body, sub)
-        return self._put_rows(aux, rows, sub)
+        ``sub['len']`` must already hold each row's re-decode start.
+
+        The whole body (boundary COW, page schedule, gather → chunked
+        decode → scatter) is gated on any row actually being behind:
+        refill_aux runs for every slot every tick, but almost all calls
+        are no-ops (nothing settled, or a frontier hit already landed the
+        row at its target), and the unconditional bookkeeping alone is
+        expensive enough to show up per tick.
+        """
+        return jax.lax.cond(
+            jnp.any(sub["len"] < target),
+            lambda op: self._paged_catch_up_behind(op[0], op[1], r, s_max),
+            lambda op: op[0],
+            (sub, target),
+        )
+
+    def _paged_catch_up_behind(self, sub, target, r, s_max):
+        from ..models import alloc_blocks
+
+        bs = self.block_size
+        p = self.num_blocks
+        mp = sub["table"].shape[1]
+        idx = jnp.arange(r)
+        start = sub["len"]
+        behind = start < target
+
+        # Boundary page: rows resuming mid-page COW out of shared blocks.
+        bwrite = behind & (start % bs > 0)
+        table, refcount, oom, wb, _, copy_src, copy_dst = self._page_write(
+            sub["table"], sub["refcount"], sub["oom"], idx,
+            jnp.minimum(start, s_max - 1), bwrite,
+        )
+        page_ok = jnp.ones((r, mp), jnp.bool_).at[
+            idx, jnp.clip(start // bs, 0, mp - 1)
+        ].set(jnp.where(bwrite, wb < p, True))
+        sub = dict(sub, table=table, refcount=refcount, oom=oom)
+        for key, _, _ in self._branches():
+            b = sub[key]
+            sub[key] = dict(
+                b,
+                k=b["k"].at[:, copy_dst].set(b["k"][:, copy_src], mode="drop"),
+                v=b["v"].at[:, copy_dst].set(b["v"][:, copy_src], mode="drop"),
+            )
+
+        # Whole-suffix page schedule: one fresh block per page in [lo, hi).
+        lo = (start + bs - 1) // bs
+        hi = (target + bs - 1) // bs
+
+        def alloc_body(pi, c):
+            table, refcount, oom, page_ok = c
+            need = behind & (pi >= lo) & (pi < hi)
+            blocks, refcount, n_fail = alloc_blocks(refcount, need)
+            got = need & (blocks < p)
+            table = table.at[:, pi].set(jnp.where(got, blocks, table[:, pi]))
+            page_ok = page_ok.at[:, pi].set(
+                jnp.where(need, got, page_ok[:, pi])
+            )
+            return table, refcount, oom + n_fail, page_ok
+
+        table, refcount, oom, page_ok = jax.lax.fori_loop(
+            0, mp, alloc_body, (sub["table"], sub["refcount"], sub["oom"],
+                                page_ok)
+        )
+        sub = dict(sub, table=table, refcount=refcount, oom=oom)
+
+        # Dense view → the dense evaluator's chunked catch-up → scatter back.
+        t_clip = jnp.clip(table, 0, p - 1)
+
+        def dense(pool):
+            out = pool[:, t_clip]                 # [L, R, mp, bs, hkv, hd]
+            l_, r_, mp_, bs_, hk, hd = out.shape
+            return out.reshape(l_, r_, mp_ * bs_, hk, hd)
+
+        dsub = {"tokens": sub["tokens"], "len": sub["len"],
+                "pol": (), "rew": ()}
+        for key, _, _ in self._branches():
+            b = sub[key]
+            dsub[key] = {
+                "cache": {"kv": {"k": dense(b["k"]), "v": dense(b["v"])}},
+                "logits": b["logits"],
+            }
+        dsub = self._catch_up(dsub, target, r, s_max)
+
+        pages = jnp.arange(mp)
+        changed = (
+            behind[:, None]
+            & (pages[None, :] >= (start // bs)[:, None])
+            & (pages[None, :] < hi[:, None])
+            & page_ok
+        )
+        dst = jnp.where(changed, t_clip, p).reshape(-1)
+        out = dict(sub, len=dsub["len"])
+        for key, _, _ in self._branches():
+            d = dsub[key]["cache"]["kv"]
+
+            def repage(x):
+                l_ = x.shape[0]
+                return x.reshape(l_, r * mp, bs, *x.shape[3:])
+
+            out[key] = dict(
+                sub[key],
+                k=sub[key]["k"].at[:, dst].set(repage(d["k"]), mode="drop"),
+                v=sub[key]["v"].at[:, dst].set(repage(d["v"]), mode="drop"),
+                logits=dsub[key]["logits"],
+            )
+        return out
 
     def aux_blocks(self, aux) -> Optional[jax.Array]:
         return jnp.sum(aux["refcount"] > 0)
+
+
+# ---------------------------------------------------------------------------
+# Frontier-speculative expansion: score every candidate child in one forward.
+# ---------------------------------------------------------------------------
+
+
+class _FrontierMixin:
+    """Shared frontier-cache logic for the dense and paged evaluators.
+
+    Every tick advance runs through ``models.decode_frontier`` /
+    ``paged_decode_frontier``: instead of decoding ONLY the chosen token,
+    the slot's ``A = top_k`` candidate children — exactly the action table
+    :meth:`ModelEvaluator._transition` decodes ranks against — are scored in
+    one tree-batched forward over the shared prefix.  The chosen candidate's
+    logits and K/V row commit to the cache (bit-identical to the plain
+    decode step), and EXPAND ticks additionally snapshot the whole frontier
+    into per-slot aux (``aux['fr']``):
+
+    * ``ptok``/``plen`` — the parent path the frontier was scored FROM;
+    * ``cand i32[N, A]`` — the candidate tokens (the transition's top-K);
+    * per branch: ``plog`` (the parent position's logits), ``clog [N, A, V]``
+      (every candidate's next-position logits) and ``ck``/``cv``
+      (``[L, N, A, Hkv, D]``, every candidate's own K/V entry).
+
+    **Refill hits** (:meth:`refill_aux` in the concrete classes): WU-UCT's
+    refill assigns the settled slot a tree path that is almost always the
+    SAME parent (sibling expansion) or one of its children (deepening) —
+    both of which the snapshot already answers:
+
+    * *parent hit* (``len(path) == plen``, path == ptok): restore ``plog``,
+      roll ``len`` straight to the target — the standard rollback's forced
+      final-token re-decode existed only to regenerate these logits;
+    * *child hit* (``len(path) == plen + 1``, last token ∈ ``cand``):
+      restore ``clog[rank]`` and commit ``ck``/``cv[rank]`` at position
+      ``plen`` — the full refill without any forward.
+
+    Hit rows skip the catch-up loop entirely (zero model dispatches); the
+    returned ``hits`` mask feeds the engines' ``frontier_hits`` counter so
+    WU-UCT's ``O_s`` accounting is visibly absorbing speculative visits.
+    A refill onto a path that diverges from ``ptok`` invalidates the entry.
+    """
+
+    def _fr_init(self, aux):
+        n, _ = aux["tokens"].shape
+        a = self.top_k
+        fr = {
+            "ptok": jnp.zeros_like(aux["tokens"]),
+            "plen": jnp.zeros((n,), jnp.int32),
+            "valid": jnp.zeros((n,), jnp.bool_),
+            "cand": jnp.zeros((n, a), jnp.int32),
+            "pol": (), "rew": (),
+        }
+        for key, _, cfg in self._branches():
+            lg = aux[key]["logits"]
+            v = lg.shape[-1]
+            fr[key] = {
+                "plog": jnp.zeros_like(lg),
+                "clog": jnp.zeros((n, a, v), lg.dtype),
+                "ck": jnp.zeros(
+                    (cfg.num_layers, n, a, cfg.num_kv_heads, cfg.head_dim),
+                    cfg.dtype,
+                ),
+                "cv": jnp.zeros(
+                    (cfg.num_layers, n, a, cfg.num_kv_heads, cfg.head_dim),
+                    cfg.dtype,
+                ),
+            }
+        return fr
+
+    def init_aux(self, root_states, prefix):
+        aux = super().init_aux(root_states, prefix)
+        aux["fr"] = self._fr_init(aux)
+        return aux
+
+    def _take_rows(self, aux, rows):
+        sub = super()._take_rows(aux, rows)
+        fr = aux["fr"]
+
+        def br(b):
+            if b == ():
+                return ()
+            return {
+                "plog": b["plog"][rows], "clog": b["clog"][rows],
+                "ck": b["ck"][:, rows], "cv": b["cv"][:, rows],
+            }
+
+        sub["fr"] = {
+            "ptok": fr["ptok"][rows], "plen": fr["plen"][rows],
+            "valid": fr["valid"][rows], "cand": fr["cand"][rows],
+            "pol": br(fr["pol"]), "rew": br(fr["rew"]),
+        }
+        return sub
+
+    def _put_rows(self, aux, rows, sub):
+        out = super()._put_rows(aux, rows, sub)
+        fr, sfr = aux["fr"], sub["fr"]
+
+        def br(b, sb):
+            if b == ():
+                return ()
+            return {
+                "plog": b["plog"].at[rows].set(sb["plog"]),
+                "clog": b["clog"].at[rows].set(sb["clog"]),
+                "ck": b["ck"].at[:, rows].set(sb["ck"]),
+                "cv": b["cv"].at[:, rows].set(sb["cv"]),
+            }
+
+        out["fr"] = {
+            "ptok": fr["ptok"].at[rows].set(sfr["ptok"]),
+            "plen": fr["plen"].at[rows].set(sfr["plen"]),
+            "valid": fr["valid"].at[rows].set(sfr["valid"]),
+            "cand": fr["cand"].at[rows].set(sfr["cand"]),
+            "pol": br(fr["pol"], sfr["pol"]),
+            "rew": br(fr["rew"], sfr["rew"]),
+        }
+        return out
+
+    def _fr_record(self, fr, pre_tokens, length, cand, is_exp):
+        """Snapshot the parent path + candidate set on EXPAND rows."""
+        exp2 = is_exp[:, None]
+        return dict(
+            fr,
+            ptok=jnp.where(exp2, pre_tokens, fr["ptok"]),
+            plen=jnp.where(is_exp, length, fr["plen"]),
+            valid=fr["valid"] | is_exp,
+            cand=jnp.where(exp2, cand, fr["cand"]),
+        )
+
+    def _frontier_hits(self, sub, tokens, new_state, common, mask):
+        """Classify each refill row against its frontier snapshot.
+
+        Returns ``(parent_hit, child_hit, crank, pmatch)``; ``crank`` is the
+        matched candidate's rank (valid only under ``child_hit``).  Both hit
+        kinds require the CACHE to still hold the parent prefix (via the
+        uncapped ``common``) *and* the new path to match the snapshot's
+        parent path (``pmatch``) — the two can diverge independently after
+        intervening refills.
+        """
+        fr = sub["fr"]
+        s_max = tokens.shape[-1]
+        r = tokens.shape[0]
+        idx = jnp.arange(r)
+        pos = jnp.arange(s_max)
+        l_new = jnp.asarray(new_state.length, jnp.int32)
+        plen = fr["plen"]
+        cmp_len = jnp.minimum(plen, l_new)
+        pmatch = jnp.logical_not(
+            jnp.any(
+                (fr["ptok"] != tokens) & (pos[None, :] < cmp_len[:, None]),
+                axis=1,
+            )
+        )
+        last = tokens[idx, jnp.clip(l_new - 1, 0, s_max - 1)]
+        is_cand = fr["cand"] == last[:, None]
+        crank = jnp.argmax(is_cand, axis=1)
+        ok = mask & fr["valid"] & pmatch
+        parent_hit = ok & (l_new == plen) & (common >= l_new)
+        child_hit = (
+            ok & (l_new == plen + 1) & jnp.any(is_cand, axis=1)
+            & (common >= plen)
+        )
+        return parent_hit, child_hit, crank, pmatch
+
+    def tick(self, cfg, kind, act, state, rollout_done, acc, disc, steps, keys,
+             aux=()):
+        if isinstance(aux, tuple) and aux == ():
+            raise ValueError(
+                "frontier evaluators need their slot-aux cache (init_aux); "
+                "they run only inside the async engines — build with "
+                "SearchSpec(engine='async') / build_searcher"
+            )
+        pol = aux["pol"]["logits"]
+        rew = aux["rew"]["logits"] if aux["rew"] != () else pol
+        out, token = self._transition(
+            cfg, kind, act, state, rollout_done, acc, disc, steps, keys, pol,
+            rew,
+        )
+        fed = (kind != FREE) & jnp.logical_not(state.done)
+        is_exp = fed & (kind == EXPAND)
+        # Only EXPAND rows need the A-wide frontier snapshot; ticks where
+        # every fed slot is mid-rollout (the majority — expansions number
+        # num_simulations, ticks number far more) take the plain one-token
+        # advance and carry the snapshot through untouched.
+        aux2 = jax.lax.cond(
+            jnp.any(is_exp),
+            lambda op: self._advance_frontier(*op),
+            lambda op: dict(
+                self._advance(op[0], op[1], op[2]), fr=op[0]["fr"]
+            ),
+            (aux, token, fed, is_exp),
+        )
+        return out, aux2
+
+
+class FrontierModelEvaluator(_FrontierMixin, CachedModelEvaluator):
+    """:class:`CachedModelEvaluator` with frontier-speculative expansion.
+
+    Tick advances run ``models.decode_frontier`` (tree-batched candidate
+    scoring over the dense per-slot cache); refills of the snapshotted
+    parent or any of its candidate children are answered from aux with zero
+    model forwards.  See :class:`_FrontierMixin` for the cache semantics.
+    """
+
+    def __init__(self, model_cfg, params, *, top_k: int, eos_token: int = 0,
+                 reward_cfg=None, reward_params=None,
+                 value_fn: Optional[Callable] = None,
+                 decode_fn: Optional[Callable] = None,
+                 prefill_fn: Optional[Callable] = None,
+                 chunk_fn: Optional[Callable] = None,
+                 refill_chunk: int = 8,
+                 frontier_fn: Optional[Callable] = None):
+        super().__init__(
+            model_cfg, params, top_k=top_k, eos_token=eos_token,
+            reward_cfg=reward_cfg, reward_params=reward_params,
+            value_fn=value_fn, decode_fn=decode_fn, prefill_fn=prefill_fn,
+            chunk_fn=chunk_fn, refill_chunk=refill_chunk,
+        )
+        if frontier_fn is None:
+            from ..models import decode_frontier as frontier_fn
+        self.frontier_fn = frontier_fn
+
+    def _advance_frontier(self, aux, token, fed, is_exp):
+        """One tree-batched frontier forward advances every slot.
+
+        The chosen candidate's logits and K/V row commit exactly as
+        :meth:`CachedModelEvaluator._advance` would have (same math: each
+        candidate attends the prefix plus itself); EXPAND rows snapshot the
+        full candidate set into ``aux['fr']``.
+        """
+        idx = jnp.arange(token.shape[0])
+        s_max = aux["tokens"].shape[-1]
+        length = aux["len"]
+        safe = jnp.minimum(length, s_max - 1)
+        prev = aux["tokens"][idx, safe]
+        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
+
+        # The same deterministic top-K table _transition decoded the action
+        # against — the fed token is one of these candidates by construction.
+        _, cand = jax.lax.top_k(aux["pol"]["logits"], self.top_k)
+        rank = jnp.argmax(cand == token[:, None], axis=1)
+
+        fr = self._fr_record(aux["fr"], aux["tokens"], length, cand, is_exp)
+        out = dict(
+            tokens=tokens,
+            len=jnp.where(fed, length + 1, length),
+            pol=(), rew=(),
+        )
+        for key, params, cfg in self._branches():
+            b = aux[key]
+            clog, spec = self.frontier_fn(
+                params, cfg, cand, dict(b["cache"], len=safe)
+            )
+            chosen = clog[idx, rank]
+            rk = rank.reshape(1, -1, 1, 1, 1)
+            row_k = jnp.take_along_axis(spec["k"], rk, axis=2)[:, :, 0]
+            row_v = jnp.take_along_axis(spec["v"], rk, axis=2)[:, :, 0]
+            kv = b["cache"]["kv"]
+            kv = {
+                "k": kv["k"].at[:, idx, safe].set(row_k),
+                "v": kv["v"].at[:, idx, safe].set(row_v),
+            }
+            out[key] = {
+                "cache": dict(b["cache"], kv=kv),
+                "logits": jnp.where(
+                    fed[:, None], chosen, b["logits"]
+                ).astype(b["logits"].dtype),
+            }
+            fb = fr[key]
+            fr[key] = {
+                "plog": jnp.where(is_exp[:, None], b["logits"], fb["plog"]),
+                "clog": jnp.where(
+                    is_exp[:, None, None], clog, fb["clog"]
+                ).astype(fb["clog"].dtype),
+                "ck": jnp.where(
+                    is_exp[None, :, None, None, None], spec["k"], fb["ck"]
+                ).astype(fb["ck"].dtype),
+                "cv": jnp.where(
+                    is_exp[None, :, None, None, None], spec["v"], fb["cv"]
+                ).astype(fb["cv"].dtype),
+            }
+        out["fr"] = fr
+        return out
+
+    def refill_aux(self, cfg, aux, rows, new_state, mask):
+        del cfg
+        sub = self._take_rows(aux, rows)
+        r = rows.shape[0]
+        s_max = sub["tokens"].shape[-1]
+        idx = jnp.arange(r)
+        start, target, tokens, common = self._rollback_targets(
+            sub, new_state, mask
+        )
+        parent_hit, child_hit, crank, pmatch = self._frontier_hits(
+            sub, tokens, new_state, common, mask
+        )
+        hit = parent_hit | child_hit
+        fr = sub["fr"]
+        sub["fr"] = dict(
+            fr, valid=jnp.where(mask, fr["valid"] & pmatch, fr["valid"])
+        )
+        sub = dict(sub, tokens=tokens, len=jnp.where(hit, target, start))
+        cpos = jnp.clip(fr["plen"], 0, s_max - 1)
+        rk = crank.reshape(1, -1, 1, 1, 1)
+        for key, _, _ in self._branches():
+            b = sub[key]
+            fb = fr[key]
+            logits = jnp.where(parent_hit[:, None], fb["plog"], b["logits"])
+            logits = jnp.where(
+                child_hit[:, None], fb["clog"][idx, crank], logits
+            ).astype(b["logits"].dtype)
+            row_k = jnp.take_along_axis(fb["ck"], rk, axis=2)[:, :, 0]
+            row_v = jnp.take_along_axis(fb["cv"], rk, axis=2)[:, :, 0]
+            kv = b["cache"]["kv"]
+            ch = child_hit[None, :, None, None]
+            kv = {
+                "k": kv["k"].at[:, idx, cpos].set(
+                    jnp.where(ch, row_k, kv["k"][:, idx, cpos])
+                ),
+                "v": kv["v"].at[:, idx, cpos].set(
+                    jnp.where(ch, row_v, kv["v"][:, idx, cpos])
+                ),
+            }
+            sub[key] = {"cache": dict(b["cache"], kv=kv), "logits": logits}
+        sub = self._catch_up(sub, target, r, s_max)
+        return self._put_rows(aux, rows, sub), hit
+
+
+class PagedFrontierModelEvaluator(_FrontierMixin, PagedCachedModelEvaluator):
+    """:class:`PagedCachedModelEvaluator` with frontier-speculative expansion.
+
+    Same frontier cache as :class:`FrontierModelEvaluator` over the shared
+    block pool: candidate scoring reads the prefix straight from the pages
+    (``models.paged_decode_frontier`` — no dense gather), and a child hit
+    commits its cached K/V row through the usual page bookkeeping
+    (allocation / copy-on-write via ``_page_write``).
+    """
+
+    def __init__(self, model_cfg, params, *, top_k: int, block_size: int,
+                 num_blocks: int, eos_token: int = 0, reward_cfg=None,
+                 reward_params=None, value_fn: Optional[Callable] = None,
+                 prefill_fn: Optional[Callable] = None,
+                 paged_decode_fn: Optional[Callable] = None,
+                 frontier_fn: Optional[Callable] = None):
+        super().__init__(
+            model_cfg, params, top_k=top_k, block_size=block_size,
+            num_blocks=num_blocks, eos_token=eos_token,
+            reward_cfg=reward_cfg, reward_params=reward_params,
+            value_fn=value_fn, prefill_fn=prefill_fn,
+            paged_decode_fn=paged_decode_fn,
+        )
+        if frontier_fn is None:
+            from ..models import paged_decode_frontier as frontier_fn
+        self.frontier_fn = frontier_fn
+
+    def _advance_frontier(self, aux, token, fed, is_exp):
+        """Frontier forward over the page tables; chosen row commits via the
+        standard COW/allocation bookkeeping (:meth:`_page_write`)."""
+        idx = jnp.arange(token.shape[0])
+        s_max = aux["tokens"].shape[-1]
+        length = aux["len"]
+        safe = jnp.minimum(length, s_max - 1)
+        prev = aux["tokens"][idx, safe]
+        tokens = aux["tokens"].at[idx, safe].set(jnp.where(fed, token, prev))
+
+        table, refcount, oom, wb, off, copy_src, copy_dst = self._page_write(
+            aux["table"], aux["refcount"], aux["oom"], idx, safe, fed
+        )
+
+        _, cand = jax.lax.top_k(aux["pol"]["logits"], self.top_k)
+        rank = jnp.argmax(cand == token[:, None], axis=1)
+
+        fr = self._fr_record(aux["fr"], aux["tokens"], length, cand, is_exp)
+        out = dict(
+            tokens=tokens,
+            len=jnp.where(fed, length + 1, length),
+            table=table, refcount=refcount, oom=oom,
+            pol=(), rew=(),
+        )
+        for key, params, cfg in self._branches():
+            b = aux[key]
+            pk = b["k"].at[:, copy_dst].set(b["k"][:, copy_src], mode="drop")
+            pv = b["v"].at[:, copy_dst].set(b["v"][:, copy_src], mode="drop")
+            clog, spec = self.frontier_fn(
+                params, cfg, cand,
+                {"k": pk, "v": pv, "table": table, "len": safe},
+            )
+            chosen = clog[idx, rank]
+            rk = rank.reshape(1, -1, 1, 1, 1)
+            row_k = jnp.take_along_axis(spec["k"], rk, axis=2)[:, :, 0]
+            row_v = jnp.take_along_axis(spec["v"], rk, axis=2)[:, :, 0]
+            out[key] = {
+                "k": pk.at[:, wb, off].set(row_k, mode="drop"),
+                "v": pv.at[:, wb, off].set(row_v, mode="drop"),
+                "logits": jnp.where(
+                    fed[:, None], chosen, b["logits"]
+                ).astype(b["logits"].dtype),
+            }
+            fb = fr[key]
+            fr[key] = {
+                "plog": jnp.where(is_exp[:, None], b["logits"], fb["plog"]),
+                "clog": jnp.where(
+                    is_exp[:, None, None], clog, fb["clog"]
+                ).astype(fb["clog"].dtype),
+                "ck": jnp.where(
+                    is_exp[None, :, None, None, None], spec["k"], fb["ck"]
+                ).astype(fb["ck"].dtype),
+                "cv": jnp.where(
+                    is_exp[None, :, None, None, None], spec["v"], fb["cv"]
+                ).astype(fb["cv"].dtype),
+            }
+        out["fr"] = fr
+        return out
+
+    def refill_aux(self, cfg, aux, rows, new_state, mask):
+        del cfg
+        from ..models import release_pages
+
+        sub = self._take_rows(aux, rows)
+        r = rows.shape[0]
+        s_max = sub["tokens"].shape[-1]
+        idx = jnp.arange(r)
+        start, target, tokens, common = self._rollback_targets(
+            sub, new_state, mask
+        )
+        parent_hit, child_hit, crank, pmatch = self._frontier_hits(
+            sub, tokens, new_state, common, mask
+        )
+        fr = sub["fr"]
+        plen = fr["plen"]
+        bs = self.block_size
+
+        # Hit-aware release: a parent hit keeps the whole target prefix, a
+        # child hit keeps the parent prefix (the commit lands at ``plen``).
+        keep = jnp.where(
+            parent_hit, target, jnp.where(child_hit, plen, start)
+        )
+        lo = (keep + bs - 1) // bs
+        hi = (sub["len"] + bs - 1) // bs
+        refcount = release_pages(sub["refcount"], sub["table"], lo, hi)
+        sub = dict(sub, refcount=refcount)
+
+        # Child-hit commit target, through the usual page bookkeeping.  A
+        # failed allocation (wb == pool size) demotes the row to a miss.
+        cpos = jnp.clip(plen, 0, s_max - 1)
+        table, refcount, oom, wb, off, copy_src, copy_dst = self._page_write(
+            sub["table"], sub["refcount"], sub["oom"], idx, cpos, child_hit
+        )
+        p = refcount.shape[0]
+        committed = child_hit & (wb < p)
+        hit = parent_hit | committed
+        sub = dict(
+            sub, table=table, refcount=refcount, oom=oom, tokens=tokens,
+            len=jnp.where(hit, target, start),
+        )
+        sub["fr"] = dict(
+            fr, valid=jnp.where(mask, fr["valid"] & pmatch, fr["valid"])
+        )
+        rk = crank.reshape(1, -1, 1, 1, 1)
+        for key, _, _ in self._branches():
+            b = sub[key]
+            pk = b["k"].at[:, copy_dst].set(b["k"][:, copy_src], mode="drop")
+            pv = b["v"].at[:, copy_dst].set(b["v"][:, copy_src], mode="drop")
+            fb = fr[key]
+            row_k = jnp.take_along_axis(fb["ck"], rk, axis=2)[:, :, 0]
+            row_v = jnp.take_along_axis(fb["cv"], rk, axis=2)[:, :, 0]
+            logits = jnp.where(parent_hit[:, None], fb["plog"], b["logits"])
+            logits = jnp.where(
+                committed[:, None], fb["clog"][idx, crank], logits
+            ).astype(b["logits"].dtype)
+            sub[key] = dict(
+                b,
+                k=pk.at[:, wb, off].set(row_k, mode="drop"),
+                v=pv.at[:, wb, off].set(row_v, mode="drop"),
+                logits=logits,
+            )
+        sub = self._paged_catch_up(sub, target, r, s_max)
+        return self._put_rows(aux, rows, sub), hit

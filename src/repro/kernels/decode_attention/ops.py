@@ -7,6 +7,10 @@ import functools
 import jax
 
 from .decode_attention import decode_attention_fwd, paged_decode_attention_fwd
+from .tree_decode_attention import (
+    paged_tree_decode_attention_fwd,
+    tree_decode_attention_fwd,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -29,4 +33,30 @@ def paged_decode_attention(
         interpret = jax.default_backend() != "tpu"
     return paged_decode_attention_fwd(
         q, pool_k, pool_v, page_table, kv_len, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def tree_decode_attention(
+    q, k_cache, v_cache, k_spec, v_spec, kv_len, tree_mask=None, *,
+    block_k: int = 512, interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return tree_decode_attention_fwd(
+        q, k_cache, v_cache, k_spec, v_spec, kv_len, tree_mask,
+        block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_tree_decode_attention(
+    q, pool_k, pool_v, page_table, k_spec, v_spec, kv_len, tree_mask=None, *,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return paged_tree_decode_attention_fwd(
+        q, pool_k, pool_v, page_table, k_spec, v_spec, kv_len, tree_mask,
+        interpret=interpret,
     )

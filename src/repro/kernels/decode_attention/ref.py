@@ -7,6 +7,8 @@ import jax.numpy as jnp
 
 from ...models.layers import decode_attention as _ref
 from ...models.layers import paged_decode_attention as _paged_ref
+from ...models.layers import paged_tree_decode_attention as _paged_tree_ref
+from ...models.layers import tree_decode_attention as _tree_ref
 
 
 def decode_attention_ref(q, k_cache, v_cache, kv_len):
@@ -21,3 +23,20 @@ def paged_decode_attention_ref(q, pool_k, pool_v, page_table, kv_len):
         q[:, None], pool_k, pool_v, page_table, jnp.asarray(kv_len)
     )
     return out[:, 0]
+
+
+def tree_decode_attention_ref(
+    q, k_cache, v_cache, k_spec, v_spec, kv_len, tree_mask=None
+):
+    return _tree_ref(
+        q, k_cache, v_cache, k_spec, v_spec, jnp.asarray(kv_len), tree_mask
+    )
+
+
+def paged_tree_decode_attention_ref(
+    q, pool_k, pool_v, page_table, k_spec, v_spec, kv_len, tree_mask=None
+):
+    return _paged_tree_ref(
+        q, pool_k, pool_v, page_table, k_spec, v_spec,
+        jnp.asarray(kv_len), tree_mask,
+    )

@@ -1,0 +1,274 @@
+"""Pallas TPU kernel: tree-batched speculative decode attention.
+
+Frontier expansion scores all ``A`` candidate children of a settled leaf in
+one forward — the queries differ only in their final token, so the shared
+prefix K/V should stream through VMEM ONCE for the whole candidate set, not
+once per candidate.  The kernel is the split-KV decode kernel widened to an
+``[A, Hq, D]`` query tile: prefix blocks fold into the online-softmax state
+exactly as before (now per candidate), and the last grid step folds in the
+speculative tail — each candidate's own K/V entry, which lives OUTSIDE the
+cache — under a caller-supplied ``[A, A]`` tree mask (identity for a flat
+frontier: candidate ``i`` attends only tail entry ``i``).
+
+The paged variant walks the page table via scalar prefetch, identical to
+``_paged_decode_kernel``: only the addressing differs, the math is shared.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _tree_decode_kernel(
+    len_ref,    # [B] i32 (SMEM) — per-batch valid KV prefix length
+    q_ref,      # [A, Hq, D]
+    k_ref,      # [block_k, Hkv, D]
+    v_ref,      # [block_k, Hkv, D]
+    ks_ref,     # [A, Hkv, D] — speculative tail keys for this row
+    vs_ref,     # [A, Hkv, D]
+    mask_ref,   # [A, A] i32 — tree mask (nonzero = attend)
+    o_ref,      # [A, Hq, D]
+    m_scr,      # [A, Hq, 1] f32
+    l_scr,      # [A, Hq, 1] f32
+    acc_scr,    # [A, Hq, D] f32
+    *,
+    scale: float,
+    block_k: int,
+    n_kv: int,
+    group: int,
+):
+    ki = pl.program_id(1)
+    kv_len = len_ref[pl.program_id(0)]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(ki * block_k < kv_len)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32)                    # [A, Hq, D]
+        k = k_ref[...].astype(jnp.float32)                    # [bk, Hkv, D]
+        v = v_ref[...].astype(jnp.float32)
+        a, hq, _ = q.shape
+        bk = k.shape[0]
+        kg = jnp.repeat(k, group, axis=1)                     # [bk, Hq, D]
+        s = jnp.einsum("ahd,jhd->ahj", q, kg) * scale         # [A, Hq, bk]
+        kv_pos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (a, hq, bk), 2
+        )
+        valid = kv_pos < kv_len
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        vg = jnp.repeat(v, group, axis=1)                     # [bk, Hq, D]
+        acc_scr[...] = acc_scr[...] * alpha + jnp.einsum("ahj,jhd->ahd", p, vg)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _tail_and_finalize():
+        # Fold the speculative tail (A extra K/V entries, masked by the tree
+        # mask) into the online-softmax state, then normalize.  Runs after
+        # the prefix fold of this block (pl.when bodies run in order).
+        q = q_ref[...].astype(jnp.float32)                    # [A, Hq, D]
+        ks = jnp.repeat(
+            ks_ref[...].astype(jnp.float32), group, axis=1
+        )                                                     # [A, Hq, D]
+        vs = jnp.repeat(vs_ref[...].astype(jnp.float32), group, axis=1)
+        st = jnp.einsum("ahd,jhd->ahj", q, ks) * scale        # [A, Hq, A]
+        attend = mask_ref[...] != 0                           # [A, A]
+        st = jnp.where(attend[:, None, :], st, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(st, axis=-1, keepdims=True))
+        p = jnp.where(attend[:, None, :], jnp.exp(st - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc_scr[...] * alpha + jnp.einsum("ahj,jhd->ahd", p, vs)
+        o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+def _paged_tree_decode_kernel(
+    table_ref,  # [B, n_pages] i32 (scalar prefetch) — consumed by index maps
+    len_ref,    # [B] i32 (scalar prefetch)
+    q_ref,
+    k_ref,      # [block_size, Hkv, D] — one page, fetched via the page table
+    v_ref,
+    ks_ref,
+    vs_ref,
+    mask_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    scale: float,
+    block_k: int,
+    n_kv: int,
+    group: int,
+):
+    del table_ref
+    _tree_decode_kernel(
+        len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, o_ref,
+        m_scr, l_scr, acc_scr,
+        scale=scale, block_k=block_k, n_kv=n_kv, group=group,
+    )
+
+
+def _prep_mask(tree_mask, a):
+    if tree_mask is None:
+        return jnp.eye(a, dtype=jnp.int32)
+    return jnp.asarray(tree_mask).astype(jnp.int32)
+
+
+def tree_decode_attention_fwd(
+    q: jax.Array,           # [B, A, Hq, D]
+    k_cache: jax.Array,     # [B, S, Hkv, D]
+    v_cache: jax.Array,     # [B, S, Hkv, D]
+    k_spec: jax.Array,      # [B, A, Hkv, D]
+    v_spec: jax.Array,      # [B, A, Hkv, D]
+    kv_len: jax.Array,      # [] or [B] i32
+    tree_mask: jax.Array | None = None,   # [A, A]; None = identity
+    *,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jax.Array:
+    b, a, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = hq // hkv
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    n_kv = s // block_k
+    scale = 1.0 / math.sqrt(d)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    mask = _prep_mask(tree_mask, a)
+
+    kernel = functools.partial(
+        _tree_decode_kernel, scale=scale, block_k=block_k, n_kv=n_kv,
+        group=group,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((None, a, hq, d), lambda bi, ki: (bi, 0, 0, 0)),
+            pl.BlockSpec((None, block_k, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, block_k, hkv, d), lambda bi, ki: (bi, ki, 0, 0)),
+            pl.BlockSpec((None, a, hkv, d), lambda bi, ki: (bi, 0, 0, 0)),
+            pl.BlockSpec((None, a, hkv, d), lambda bi, ki: (bi, 0, 0, 0)),
+            pl.BlockSpec((a, a), lambda bi, ki: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, a, hq, d), lambda bi, ki: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, a, hq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((a, hq, 1), jnp.float32),
+            pltpu.VMEM((a, hq, 1), jnp.float32),
+            pltpu.VMEM((a, hq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **(
+            {}
+            if interpret
+            else {
+                "compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+            }
+        ),
+    )(lens, q, k_cache, v_cache, k_spec, v_spec, mask)
+    return out
+
+
+def paged_tree_decode_attention_fwd(
+    q: jax.Array,           # [B, A, Hq, D]
+    pool_k: jax.Array,      # [P, block_size, Hkv, D]
+    pool_v: jax.Array,      # [P, block_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] i32
+    k_spec: jax.Array,      # [B, A, Hkv, D]
+    v_spec: jax.Array,      # [B, A, Hkv, D]
+    kv_len: jax.Array,      # [] or [B] i32
+    tree_mask: jax.Array | None = None,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tree decode whose shared prefix lives in a paged block pool.
+
+    The sequential grid axis walks logical pages; the physical pool block id
+    comes from scalar-prefetched ``page_table`` inside the K/V index maps,
+    so no dense gather of the prefix ever materializes.  Garbage table
+    entries beyond the live pages are clipped into range and masked by
+    ``kv_len``, exactly like ``paged_decode_attention_fwd``.
+    """
+    b, a, hq, d = q.shape
+    p, block_size, hkv, _ = pool_k.shape
+    n_pages = page_table.shape[1]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    table = jnp.clip(page_table.astype(jnp.int32), 0, p - 1)
+    mask = _prep_mask(tree_mask, a)
+
+    kernel = functools.partial(
+        _paged_tree_decode_kernel, scale=scale, block_k=block_size,
+        n_kv=n_pages, group=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec(
+                (None, a, hq, d), lambda bi, pi, tab, lens: (bi, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, block_size, hkv, d),
+                lambda bi, pi, tab, lens: (tab[bi, pi], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, block_size, hkv, d),
+                lambda bi, pi, tab, lens: (tab[bi, pi], 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, a, hkv, d), lambda bi, pi, tab, lens: (bi, 0, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, a, hkv, d), lambda bi, pi, tab, lens: (bi, 0, 0, 0)
+            ),
+            pl.BlockSpec((a, a), lambda bi, pi, tab, lens: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, a, hq, d), lambda bi, pi, tab, lens: (bi, 0, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((a, hq, 1), jnp.float32),
+            pltpu.VMEM((a, hq, 1), jnp.float32),
+            pltpu.VMEM((a, hq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, a, hq, d), q.dtype),
+        interpret=interpret,
+        **(
+            {}
+            if interpret
+            else {
+                "compiler_params": pltpu.CompilerParams(
+                    dimension_semantics=("parallel", "arbitrary")
+                )
+            }
+        ),
+    )(table, lens, q, pool_k, pool_v, k_spec, v_spec, mask)
+    return out

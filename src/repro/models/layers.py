@@ -189,6 +189,78 @@ def paged_decode_attention(
     return decode_attention(q, k, v, kv_len)
 
 
+def tree_decode_attention(
+    q: jax.Array,           # [B, A, Hq, D] — A speculative queries per row
+    k_cache: jax.Array,     # [B, S, Hkv, D]
+    v_cache: jax.Array,     # [B, S, Hkv, D]
+    k_spec: jax.Array,      # [B, A, Hkv, D] — speculative tail keys
+    v_spec: jax.Array,      # [B, A, Hkv, D]
+    kv_len: jax.Array,      # [] or [B] — number of valid cache entries
+    tree_mask: Optional[jax.Array] = None,   # [A, A] bool; default identity
+) -> jax.Array:
+    """Tree-batched speculative decode: A candidate tokens share one prefix.
+
+    Every query sits at absolute position ``kv_len`` and attends to the full
+    valid prefix plus the speculative tail entries ``tree_mask[i, :]`` allows
+    (identity by default: each candidate sees only its own K/V).  The tail
+    K/V live OUTSIDE the cache — nothing here writes cache state, which is
+    what makes the frontier scores safe to throw away or commit later.
+
+    jnp oracle for the Pallas kernel in ``kernels/decode_attention``.
+    """
+    b, a, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    qf = q.reshape(b, a, hkv, group, d)
+    scores = jnp.einsum(
+        "bahgd,bshd->bahgs", qf, k_cache, preferred_element_type=jnp.float32
+    ) * scale                                                  # [B,A,Hkv,G,S]
+    pos = jnp.arange(s)
+    valid = pos[None, :] < jnp.reshape(kv_len, (-1, 1))        # [B or 1, S]
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    tail = jnp.einsum(
+        "bahgd,bjhd->bahgj", qf, k_spec, preferred_element_type=jnp.float32
+    ) * scale                                                  # [B,A,Hkv,G,A]
+    if tree_mask is None:
+        tree_mask = jnp.eye(a, dtype=jnp.bool_)
+    attend = jnp.asarray(tree_mask).astype(jnp.bool_)
+    tail = jnp.where(attend[None, :, None, None, :], tail, NEG_INF)
+    full = jnp.concatenate([scores, tail], axis=-1)            # [B,A,Hkv,G,S+A]
+    p = jax.nn.softmax(full, axis=-1)
+    v_full = jnp.concatenate([v_cache, v_spec], axis=1)        # [B,S+A,Hkv,D]
+    out = jnp.einsum(
+        "bahgs,bshd->bahgd", p.astype(v_full.dtype), v_full,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, a, hq, d).astype(q.dtype)
+
+
+def paged_tree_decode_attention(
+    q: jax.Array,           # [B, A, Hq, D]
+    pool_k: jax.Array,      # [P, block_size, Hkv, D]
+    pool_v: jax.Array,      # [P, block_size, Hkv, D]
+    page_table: jax.Array,  # [B, n_pages] i32
+    k_spec: jax.Array,      # [B, A, Hkv, D]
+    v_spec: jax.Array,      # [B, A, Hkv, D]
+    kv_len: jax.Array,      # [] or [B]
+    tree_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Tree-batched speculative decode over a paged prefix (jnp oracle).
+
+    Same gather-then-dense strategy as ``paged_decode_attention``: table
+    entries beyond the live pages may be garbage — clipped into pool range,
+    positions masked by ``kv_len``.
+    """
+    b = q.shape[0]
+    p, block_size, hkv, d = pool_k.shape
+    n_pages = page_table.shape[1]
+    tab = jnp.clip(page_table.astype(jnp.int32), 0, p - 1)
+    k = pool_k[tab].reshape(b, n_pages * block_size, hkv, d)
+    v = pool_v[tab].reshape(b, n_pages * block_size, hkv, d)
+    return tree_decode_attention(q, k, v, k_spec, v_spec, kv_len, tree_mask)
+
+
 # ---------------------------------------------------------------------------
 # Attention module (projections + rope + cache handling)
 # ---------------------------------------------------------------------------
@@ -348,6 +420,56 @@ def attention_block(
     b, s = x.shape[:2]
     out = out.reshape(b, s, cfg.num_heads * cfg.head_dim) @ p["wo"]
     return out, new_cache
+
+
+def tree_attention_block(p, cfg, x, positions, k_cache, v_cache, kv_len):
+    """Frontier attention: ``A`` speculative queries over a READ-ONLY cache.
+
+    ``x`` is ``[N, A, d]`` — the A candidate tokens of each slot, all sitting
+    at absolute position ``kv_len`` (the same ``positions`` row for every
+    candidate).  Unlike :func:`attention_block`, the cache is never written:
+    each candidate's own K/V ride along as the speculative tail
+    (identity tree mask), and the caller decides which candidate — if any —
+    to commit later.  Returns ``(out [N, A, d], k_spec, v_spec)``.
+    """
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    if _use_pallas(cfg):
+        from ..kernels.decode_attention.ops import tree_decode_attention as _tk
+
+        s = k_cache.shape[1]
+        bk = max(1, min(512, s))
+        while s % bk:
+            bk //= 2
+        out = _tk(q, k_cache, v_cache, k, v, kv_len, block_k=bk)
+    else:
+        out = tree_decode_attention(q, k_cache, v_cache, k, v, kv_len)
+    n, a = x.shape[:2]
+    out = out.reshape(n, a, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    return out, k, v
+
+
+def paged_tree_attention_block(
+    p, cfg, x, positions, pool_k, pool_v, page_table, kv_len
+):
+    """Frontier attention over a paged prefix (read-only, pool never written).
+
+    Same contract as :func:`tree_attention_block` with the shared prefix
+    addressed through a per-row page table.
+    """
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    if _use_pallas(cfg):
+        from ..kernels.decode_attention.ops import (
+            paged_tree_decode_attention as _ptk,
+        )
+
+        out = _ptk(q, pool_k, pool_v, page_table, k, v, kv_len)
+    else:
+        out = paged_tree_decode_attention(
+            q, pool_k, pool_v, page_table, k, v, kv_len
+        )
+    n, a = x.shape[:2]
+    out = out.reshape(n, a, cfg.num_heads * cfg.head_dim) @ p["wo"]
+    return out, k, v
 
 
 def cross_attention_block(p, cfg, x, enc_kv):

@@ -36,6 +36,7 @@ from .layers import (
     mlp_block,
     moe_block,
     rms_norm,
+    tree_attention_block,
 )
 from .ssm import init_ssm_block, init_ssm_cache, ssm_block
 
@@ -642,6 +643,60 @@ def decode_chunk(
     )
     new_len = jnp.where(cur < target, jnp.minimum(cur + c, target), cur)
     return logits[:, 0], dict(cache, len=new_len)
+
+
+def decode_frontier(
+    params, cfg: ModelConfig, tokens, cache
+) -> tuple[jax.Array, Pytree]:
+    """Score ``A`` candidate next tokens per row in ONE forward (read-only).
+
+    ``tokens`` is ``[N, A]``: each row's candidate children, all sitting at
+    absolute position ``cache['len']`` — they are *alternatives* for the
+    same next position, not a sequence.  The shared prefix K/V is read once
+    per layer (tree attention with an identity mask over the speculative
+    tail: candidate ``i`` attends the prefix plus its own K/V only), and the
+    cache is NEVER written.  Returns ``(logits [N, A, V], spec)`` where
+    ``spec = {"k": [L, N, A, Hkv, D], "v": ...}`` holds each candidate's own
+    K/V entry so the caller can commit the chosen child's row later without
+    recomputing it.
+
+    Only KV-cache families qualify (same garbage-region contract as
+    ``prefill_ragged``; speculative tails live OUTSIDE the cache entirely).
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"decode_frontier supports KV-cache LM families, not {cfg.family!r}"
+        )
+    tokens = jnp.asarray(tokens)
+    n, a = tokens.shape
+    x = params["embed"][tokens]
+    cur_len = jnp.asarray(cache["len"], jnp.int32)
+    positions = jnp.broadcast_to(
+        cur_len[:, None] if jnp.ndim(cur_len) == 1 else cur_len, (n, a)
+    )
+
+    def body(x, xs):
+        bp, kc, vc = xs
+        h, ks, vs = tree_attention_block(
+            bp["attn"], cfg, rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+            positions, kc, vc, cur_len,
+        )
+        x = x + h
+        if cfg.family == "moe":
+            h, _ = moe_block(
+                bp["moe"], cfg, rms_norm(x, bp["mlp_norm"], cfg.rms_eps)
+            )
+        else:
+            h = mlp_block(bp["mlp"], rms_norm(x, bp["mlp_norm"], cfg.rms_eps))
+        return x + h, (ks, vs)
+
+    x, (ks, vs) = _layer_scan(
+        body, x, (params["blocks"], cache["kv"]["k"], cache["kv"]["v"]), cfg
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, {"k": ks, "v": vs}
 
 
 def decode_step(params, cfg: ModelConfig, token, cache) -> tuple[jax.Array, Pytree]:

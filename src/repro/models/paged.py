@@ -42,7 +42,13 @@ import jax
 import jax.numpy as jnp
 
 from .config import ModelConfig
-from .layers import attention_block, mlp_block, moe_block, rms_norm
+from .layers import (
+    attention_block,
+    mlp_block,
+    moe_block,
+    paged_tree_attention_block,
+    rms_norm,
+)
 from .lm import KV_CACHE_FAMILIES, _layer_scan
 
 
@@ -225,3 +231,53 @@ def paged_decode_step(params, cfg: ModelConfig, token, cache):
     head = params.get("lm_head", None)
     logits = x @ head if head is not None else x @ params["embed"].T
     return logits[:, -1, :], dict(cache, k=ks, v=vs)
+
+
+def paged_decode_frontier(params, cfg: ModelConfig, tokens, cache):
+    """Score ``A`` candidate next tokens per row over a paged prefix.
+
+    Read-only twin of :func:`repro.models.lm.decode_frontier` for the paged
+    layout: ``tokens`` is ``[N, A]`` candidate alternatives for position
+    ``cache['len']``; the shared prefix is addressed through ``table`` and
+    the pool is NEVER written — each candidate's own K/V entry comes back in
+    the returned ``spec`` (``{"k": [L, N, A, Hkv, D], "v": ...}``) for the
+    caller to commit via its own page bookkeeping.
+
+    ``cache`` needs only ``k``/``v`` pools, ``table``, ``len`` (attend
+    length == candidate position) — no write keys.
+    """
+    if cfg.family not in KV_CACHE_FAMILIES:
+        raise ValueError(
+            f"paged_decode_frontier supports families {KV_CACHE_FAMILIES}, "
+            f"not {cfg.family!r}"
+        )
+    tokens = jnp.asarray(tokens)
+    n, a = tokens.shape
+    x = params["embed"][tokens]
+    cur_len = jnp.asarray(cache["len"], jnp.int32)
+    positions = jnp.broadcast_to(
+        cur_len[:, None] if jnp.ndim(cur_len) == 1 else cur_len, (n, a)
+    )
+
+    def body(x, xs):
+        bp, pk, pv = xs
+        h, ks, vs = paged_tree_attention_block(
+            bp["attn"], cfg, rms_norm(x, bp["attn_norm"], cfg.rms_eps),
+            positions, pk, pv, cache["table"], cur_len,
+        )
+        x = x + h
+        if cfg.family == "moe":
+            h, _ = moe_block(
+                bp["moe"], cfg, rms_norm(x, bp["mlp_norm"], cfg.rms_eps)
+            )
+        else:
+            h = mlp_block(bp["mlp"], rms_norm(x, bp["mlp_norm"], cfg.rms_eps))
+        return x + h, (ks, vs)
+
+    x, (ks, vs) = _layer_scan(
+        body, x, (params["blocks"], cache["k"], cache["v"]), cfg
+    )
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params.get("lm_head", None)
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return logits, {"k": ks, "v": vs}

@@ -13,6 +13,8 @@ not from parallelizing one request harder.
 
 from __future__ import annotations
 
+import json
+from pathlib import Path
 from typing import Optional, Sequence
 
 import jax
@@ -23,6 +25,37 @@ from ..core.evaluators import CachedModelEvaluator, Evaluator, ModelEvaluator
 from ..envs.token_env import TokenEnvState, make_token_env
 from ..models import forward
 from ..models.config import ModelConfig
+
+
+def _prefix_sharing_pool_blocks(
+    slots: int, max_len: int, block_size: int
+) -> int:
+    """Default paged-pool size informed by measured prefix sharing.
+
+    The dense-equivalent bound ``slots * num_pages`` assumes no page is ever
+    shared, but the committed ``paged_ceiling_*`` benchmark rows measure the
+    real peak working set of searches with sibling prefix sharing
+    (``ceiling_ratio`` = dense positions / peak paged positions).  Size the
+    pool to the dense bound shrunk by the WORST measured ratio, plus 25%
+    headroom — shallow searches share the least, so the minimum ratio is the
+    conservative choice.  Any failure to read the benchmark file falls back
+    to the dense bound.
+    """
+    from ..models import num_pages
+
+    dense = slots * num_pages(max_len, block_size)
+    try:
+        path = Path(__file__).resolve().parents[3] / "BENCH_model_eval.json"
+        rows = json.loads(path.read_text())["rows"]
+        ratio = min(
+            r["ceiling_ratio"] for r in rows if r["kind"] == "batch_ceiling"
+        )
+        if not ratio > 1.0:
+            return dense
+        shrunk = int(dense / ratio * 1.25) + 1
+        return max(1, min(dense, shrunk))
+    except Exception:
+        return dense
 
 
 class SearchService:
@@ -90,13 +123,15 @@ class SearchService:
             )
             if paged:
                 from ..core.evaluators import PagedCachedModelEvaluator
-                from ..models import num_pages
 
                 slots = spec.batch * spec.wave_size
                 if num_blocks is None:
-                    # Dense-equivalent upper bound; tune down to exploit
-                    # prefix sharing (siblings share prompt pages).
-                    num_blocks = slots * num_pages(max_len, block_size)
+                    # Prefix-sharing-aware default: the dense-equivalent
+                    # bound shrunk by the measured paged_ceiling_* sharing
+                    # ratio (with headroom); see _prefix_sharing_pool_blocks.
+                    num_blocks = _prefix_sharing_pool_blocks(
+                        slots, max_len, block_size
+                    )
                 evaluator = PagedCachedModelEvaluator(
                     model_cfg, params, block_size=block_size,
                     num_blocks=num_blocks, **kwargs,

@@ -216,7 +216,7 @@ def test_refill_rollback_matches_fresh_prefill(lm):
         done=jnp.zeros((n,), jnp.bool_),
     )
     rows = jnp.arange(n)
-    aux2 = ev.refill_aux(scfg, aux, rows, new_state, jnp.ones((n,), jnp.bool_))
+    aux2, _ = ev.refill_aux(scfg, aux, rows, new_state, jnp.ones((n,), jnp.bool_))
     fresh = ev.init_aux(new_state, (n, 1))
     np.testing.assert_array_equal(np.asarray(aux2["len"]), new_len)
     np.testing.assert_allclose(
@@ -266,7 +266,7 @@ def test_refill_catches_up_in_chunks(lm, refill_chunk, expect_calls):
         done=jnp.zeros((2,), jnp.bool_),
     )
     calls.clear()
-    aux2 = ev.refill_aux(
+    aux2, _ = ev.refill_aux(
         scfg, aux, jnp.arange(2), new_state, jnp.ones((2,), jnp.bool_)
     )
     jax.effects_barrier()

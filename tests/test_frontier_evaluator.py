@@ -1,0 +1,441 @@
+"""Frontier-speculative expansion: tree-batched decode scores every child.
+
+Claim families (ISSUE 7):
+
+* **search parity** — a search driven by the frontier evaluators (dense and
+  paged, single and batched engines) makes the SAME discrete decisions as
+  the plain cached evaluators: scoring all A candidates per tick and the
+  chosen one's commit are bit-equivalent to the one-token decode step;
+* **cache hits** — after an EXPAND tick snapshots the frontier, refilling
+  the slot back onto the snapshot parent (parent hit) or onto any of its A
+  candidate children (child hit) dispatches ZERO model forwards: logits are
+  restored from aux and the child's K/V row commits from the snapshot;
+* **rollback invalidation** — a refill onto a path that diverges from the
+  snapshot parent invalidates the frontier entry; later would-be hits miss;
+* **engine accounting** — the async engines thread the hit mask out as a
+  cumulative ``frontier_hits`` trace column, monotone and > 0 on searches
+  that revisit expanded frontiers;
+* **last_logits** — every model evaluator surfaces the most recent
+  per-slot logits via ``aux_last_logits`` (satellite).
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import (
+    CachedModelEvaluator,
+    FrontierModelEvaluator,
+    ModelEvaluator,
+    PagedCachedModelEvaluator,
+    PagedFrontierModelEvaluator,
+    SearchSpec,
+    build_searcher,
+)
+from repro.core.evaluators import EXPAND, FREE, SIM
+from repro.envs.token_env import TokenEnvState, make_token_env
+from repro.models import decode_chunk, init_params
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = dataclasses.replace(
+        get_reduced("llama3-8b"), vocab_size=64, num_layers=2,
+        d_model=32, num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+    )
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _ragged_states(max_len=16, lengths=(3, 5, 9), seed=7) -> TokenEnvState:
+    n = len(lengths)
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed), (n, max_len), 2, 60, jnp.int32
+    )
+    pos = jnp.arange(max_len)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    return TokenEnvState(
+        tokens=jnp.where(pos[None, :] < lengths[:, None], toks, 0),
+        length=lengths,
+        done=jnp.zeros((n,), jnp.bool_),
+    )
+
+
+def _scfg():
+    return SearchSpec(gamma=1.0, max_sim_steps=8).config
+
+
+def _spec(batch=0):
+    return SearchSpec(
+        algo="wu_uct", engine="async", batch=batch, num_simulations=12,
+        wave_size=4, max_depth=5, max_sim_steps=5, max_width=4, gamma=1.0,
+    )
+
+
+def _env(lm, max_len=14, top_k=4):
+    cfg, params = lm
+    return make_token_env(
+        cfg, params, jnp.asarray([3, 5, 7], jnp.int32), max_len=max_len,
+        top_k=top_k, eos_token=1,
+    )
+
+
+def _expand_tick(ev, scfg, state, aux, acts, seed=0):
+    """Drive one EXPAND tick on every row (the frontier snapshot moment)."""
+    n = state.length.shape[0]
+    kind = jnp.full((n,), EXPAND, jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    zeros_b = jnp.zeros((n,), jnp.bool_)
+    zeros_f = jnp.zeros((n,), jnp.float32)
+    (new_state, *_), aux = ev.tick(
+        scfg, kind, jnp.asarray(acts, jnp.int32), state, zeros_b, zeros_f,
+        jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.int32), keys, aux,
+    )
+    return new_state, aux
+
+
+def _child_state(parent: TokenEnvState, child_tok) -> TokenEnvState:
+    n = parent.length.shape[0]
+    idx = jnp.arange(n)
+    s_max = parent.tokens.shape[-1]
+    safe = jnp.minimum(parent.length, s_max - 1)
+    return TokenEnvState(
+        tokens=parent.tokens.at[idx, safe].set(
+            jnp.asarray(child_tok, jnp.int32)
+        ),
+        length=parent.length + 1,
+        done=parent.done,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Search parity: frontier evaluators reproduce the cached searches.
+# ---------------------------------------------------------------------------
+
+
+def test_frontier_search_matches_cached(lm):
+    cfg, params = lm
+    env = _env(lm)
+    spec = _spec()
+    key = jax.random.PRNGKey(2)
+    root = env.init(key)
+    ev_c = CachedModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    ev_f = FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    res_c = build_searcher(env, spec, evaluator=ev_c)(root, key)
+    res_f = build_searcher(env, spec, evaluator=ev_f)(root, key)
+    for f in ("action", "root_n", "tree_size", "ticks", "overflowed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_c, f)), np.asarray(getattr(res_f, f)),
+            err_msg=f"field {f}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(res_c.root_v), np.asarray(res_f.root_v), **TOL
+    )
+
+
+def test_paged_frontier_search_matches_paged_cached(lm):
+    cfg, params = lm
+    env = _env(lm)
+    spec = _spec()
+    key = jax.random.PRNGKey(2)
+    root = env.init(key)
+    kw = dict(top_k=4, eos_token=1, block_size=4, num_blocks=96)
+    ev_c = PagedCachedModelEvaluator(cfg, params, **kw)
+    ev_f = PagedFrontierModelEvaluator(cfg, params, **kw)
+    res_c = build_searcher(env, spec, evaluator=ev_c)(root, key)
+    res_f = build_searcher(env, spec, evaluator=ev_f)(root, key)
+    for f in ("action", "root_n", "tree_size", "ticks", "overflowed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_c, f)), np.asarray(getattr(res_f, f)),
+            err_msg=f"field {f}",
+        )
+    np.testing.assert_allclose(
+        np.asarray(res_c.root_v), np.asarray(res_f.root_v), **TOL
+    )
+
+
+def test_batched_frontier_search_matches_batched_cached(lm):
+    cfg, params = lm
+    env = _env(lm)
+    B = 3
+    spec = _spec(batch=B)
+    key = jax.random.PRNGKey(2)
+    roots = jax.vmap(env.init)(jax.random.split(key, B))
+    rngs = jax.random.split(jax.random.PRNGKey(1), B)
+    ev_c = CachedModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    ev_f = FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    res_c = build_searcher(env, spec, evaluator=ev_c)(roots, rngs)
+    res_f = build_searcher(env, spec, evaluator=ev_f)(roots, rngs)
+    for f in ("action", "root_n", "tree_size", "ticks", "overflowed"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_c, f)), np.asarray(getattr(res_f, f)),
+            err_msg=f"field {f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# Frontier cache hits: settle -> sibling refills dispatch zero forwards.
+# ---------------------------------------------------------------------------
+
+
+def _counting_frontier_ev(lm, calls, paged=False):
+    cfg, params = lm
+    if paged:
+        return PagedFrontierModelEvaluator(
+            cfg, params, top_k=4, eos_token=1, block_size=4, num_blocks=64,
+        )
+
+    def counting_chunk(p, c, t, target, cache):
+        jax.debug.callback(lambda: calls.append(1))
+        return decode_chunk(p, c, t, target, cache)
+
+    return FrontierModelEvaluator(
+        cfg, params, top_k=4, eos_token=1, chunk_fn=counting_chunk,
+    )
+
+
+def test_parent_and_sibling_refills_hit_frontier_cache(lm):
+    """After one EXPAND tick, refilling back onto the parent and onto every
+    one of the A candidate children answers from the frontier snapshot:
+    zero ``decode_chunk`` dispatches, and the restored logits + committed
+    K/V row equal a fresh prefill of that path."""
+    cfg, params = lm
+    calls = []
+    ev = _counting_frontier_ev(lm, calls)
+    scfg = _scfg()
+    parent = _ragged_states(lengths=(5, 7))
+    n = 2
+    aux0 = ev.init_aux(parent, (n, 1))
+    _, aux = _expand_tick(ev, scfg, parent, aux0, acts=[0, 1])
+    cand = np.asarray(aux["fr"]["cand"])          # [n, A]
+    assert np.asarray(aux["fr"]["valid"]).all()
+
+    # Parent hit: straight back to the snapshot parent, zero forwards.
+    calls.clear()
+    aux_p, hit = ev.refill_aux(
+        scfg, aux, jnp.arange(n), parent, jnp.ones((n,), jnp.bool_)
+    )
+    jax.effects_barrier()
+    assert len(calls) == 0, f"parent hit dispatched {len(calls)} chunks"
+    assert np.asarray(hit).all()
+    np.testing.assert_array_equal(
+        np.asarray(aux_p["len"]), np.asarray(parent.length)
+    )
+    fresh_p = ev.init_aux(parent, (n, 1))
+    np.testing.assert_allclose(
+        np.asarray(aux_p["pol"]["logits"], np.float32),
+        np.asarray(fresh_p["pol"]["logits"], np.float32), **TOL,
+    )
+
+    # Child hits: every candidate rank, zero forwards, correct cache.
+    for j in range(ev.top_k):
+        child = _child_state(parent, cand[:, j])
+        calls.clear()
+        aux_c, hit = ev.refill_aux(
+            scfg, aux, jnp.arange(n), child, jnp.ones((n,), jnp.bool_)
+        )
+        jax.effects_barrier()
+        assert len(calls) == 0, f"child {j} dispatched {len(calls)} chunks"
+        assert np.asarray(hit).all(), f"child {j} missed"
+        np.testing.assert_array_equal(
+            np.asarray(aux_c["len"]), np.asarray(child.length)
+        )
+        fresh = ev.init_aux(child, (n, 1))
+        np.testing.assert_allclose(
+            np.asarray(aux_c["pol"]["logits"], np.float32),
+            np.asarray(fresh["pol"]["logits"], np.float32), **TOL,
+            err_msg=f"child {j} logits",
+        )
+        # The committed K/V row is real: decoding one more token from the
+        # hit cache equals decoding from the fresh prefill.
+        nxt = jnp.asarray([21, 23], jnp.int32)
+        l1, _ = ev.decode_fn(
+            params, cfg, nxt, dict(aux_c["pol"]["cache"], len=aux_c["len"])
+        )
+        l2, _ = ev.decode_fn(
+            params, cfg, nxt, dict(fresh["pol"]["cache"], len=fresh["len"])
+        )
+        np.testing.assert_allclose(
+            np.asarray(l1, np.float32), np.asarray(l2, np.float32), **TOL,
+            err_msg=f"child {j} committed KV row",
+        )
+
+
+def test_paged_sibling_refills_hit_frontier_cache(lm):
+    """Paged twin: child hits commit through page bookkeeping (COW/alloc)
+    with refcount conservation intact and no catch-up forwards."""
+    cfg, params = lm
+    ev = _counting_frontier_ev(lm, [], paged=True)
+    scfg = _scfg()
+    parent = _ragged_states(lengths=(5, 7))
+    n = 2
+    aux0 = ev.init_aux(parent, (n, 1))
+    _, aux = _expand_tick(ev, scfg, parent, aux0, acts=[0, 1])
+    cand = np.asarray(aux["fr"]["cand"])
+
+    for j in range(ev.top_k):
+        child = _child_state(parent, cand[:, j])
+        aux_c, hit = ev.refill_aux(
+            scfg, aux, jnp.arange(n), child, jnp.ones((n,), jnp.bool_)
+        )
+        assert np.asarray(hit).all(), f"child {j} missed"
+        np.testing.assert_array_equal(
+            np.asarray(aux_c["len"]), np.asarray(child.length)
+        )
+        fresh = ev.init_aux(child, (n, 1))
+        np.testing.assert_allclose(
+            np.asarray(aux_c["pol"]["logits"], np.float32),
+            np.asarray(fresh["pol"]["logits"], np.float32), **TOL,
+            err_msg=f"child {j} logits",
+        )
+
+
+def test_divergent_refill_invalidates_frontier(lm):
+    """A refill whose path diverges from the snapshot parent is a miss, and
+    it INVALIDATES the entry: going back to the parent afterwards no longer
+    hits (the cache was rewritten under the slot)."""
+    cfg, params = lm
+    calls = []
+    ev = _counting_frontier_ev(lm, calls)
+    scfg = _scfg()
+    parent = _ragged_states(lengths=(6, 6))
+    n = 2
+    aux0 = ev.init_aux(parent, (n, 1))
+    _, aux = _expand_tick(ev, scfg, parent, aux0, acts=[0, 0])
+
+    divergent = np.asarray(parent.tokens).copy()
+    divergent[:, 2] = 61                     # diverge inside the prefix
+    div_state = TokenEnvState(
+        tokens=jnp.asarray(divergent, jnp.int32),
+        length=parent.length,
+        done=jnp.zeros((n,), jnp.bool_),
+    )
+    calls.clear()
+    aux2, hit = ev.refill_aux(
+        scfg, aux, jnp.arange(n), div_state, jnp.ones((n,), jnp.bool_)
+    )
+    jax.effects_barrier()
+    assert not np.asarray(hit).any()
+    assert len(calls) > 0, "divergent refill must catch up via forwards"
+    assert not np.asarray(aux2["fr"]["valid"]).any(), "entry must invalidate"
+
+    # Back to the original parent: the snapshot is gone, so this is a plain
+    # rollback (forwards dispatched), not a stale hit.
+    calls.clear()
+    aux3, hit = ev.refill_aux(
+        scfg, aux2, jnp.arange(n), parent, jnp.ones((n,), jnp.bool_)
+    )
+    jax.effects_barrier()
+    assert not np.asarray(hit).any()
+    assert len(calls) > 0
+    fresh = ev.init_aux(parent, (n, 1))
+    np.testing.assert_allclose(
+        np.asarray(aux3["pol"]["logits"], np.float32),
+        np.asarray(fresh["pol"]["logits"], np.float32), **TOL,
+    )
+
+
+def test_masked_rows_never_hit(lm):
+    cfg, params = lm
+    ev = FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    scfg = _scfg()
+    parent = _ragged_states(lengths=(5, 7))
+    n = 2
+    aux0 = ev.init_aux(parent, (n, 1))
+    _, aux = _expand_tick(ev, scfg, parent, aux0, acts=[0, 1])
+    mask = jnp.asarray([True, False])
+    _, hit = ev.refill_aux(scfg, aux, jnp.arange(n), parent, mask)
+    np.testing.assert_array_equal(np.asarray(hit), [True, False])
+
+
+# ---------------------------------------------------------------------------
+# Engine accounting: frontier_hits trace column.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_traces_frontier_hits(lm):
+    from repro.core.async_search import run_async_search
+
+    cfg, params = lm
+    env = _env(lm)
+    spec = _spec()
+    key = jax.random.PRNGKey(2)
+    root = env.init(key)
+    ev = FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    fn = jax.jit(functools.partial(
+        run_async_search, env, spec.config, trace_ticks=48, evaluator=ev,
+    ))
+    _, trace = fn(root, key)
+    hits = np.asarray(trace.frontier_hits)
+    assert hits[-1] > 0, "search never hit the frontier cache"
+    assert (np.diff(hits) >= 0).all(), "cumulative counter must be monotone"
+
+
+def test_batched_engine_traces_frontier_hits(lm):
+    from repro.core.batched_async_search import run_async_search_batched
+
+    cfg, params = lm
+    env = _env(lm)
+    B = 3
+    spec = _spec(batch=B)
+    key = jax.random.PRNGKey(2)
+    roots = jax.vmap(env.init)(jax.random.split(key, B))
+    rngs = jax.random.split(jax.random.PRNGKey(1), B)
+    ev = FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    fn = jax.jit(functools.partial(
+        run_async_search_batched, env, spec.config, trace_ticks=48,
+        evaluator=ev,
+    ))
+    _, trace = fn(roots, rngs)
+    hits = np.asarray(trace.frontier_hits)      # [K, B]
+    assert hits.shape[-1] == B
+    assert hits[-1].sum() > 0
+    assert (np.diff(hits, axis=0) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# last_logits satellite: every model evaluator surfaces its slot logits.
+# ---------------------------------------------------------------------------
+
+
+def test_uncached_evaluator_surfaces_last_logits(lm):
+    cfg, params = lm
+    ev = ModelEvaluator(cfg, params, top_k=4, eos_token=1)
+    scfg = _scfg()
+    state = _ragged_states()
+    n = 3
+    aux = ev.init_aux(state, (n, 1))
+    assert ev.aux_last_logits(aux) is not None
+    kind = jnp.full((n,), SIM, jnp.int32)
+    keys = jax.random.split(jax.random.PRNGKey(3), n)
+    zb, zf = jnp.zeros((n,), jnp.bool_), jnp.zeros((n,), jnp.float32)
+    (new_state, *_), aux = ev.tick(
+        scfg, kind, jnp.zeros((n,), jnp.int32), state, zb, zf,
+        jnp.ones((n,), jnp.float32), jnp.zeros((n,), jnp.int32), keys, aux,
+    )
+    got = ev.aux_last_logits(aux)
+    want = ev._position_logits(params, cfg, state.tokens, state.length)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL
+    )
+
+
+@pytest.mark.parametrize("frontier", [False, True])
+def test_cached_evaluators_surface_last_logits(lm, frontier):
+    cfg, params = lm
+    cls = FrontierModelEvaluator if frontier else CachedModelEvaluator
+    ev = cls(cfg, params, top_k=4, eos_token=1)
+    state = _ragged_states()
+    aux = ev.init_aux(state, (3, 1))
+    got = ev.aux_last_logits(aux)
+    assert got is not None
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32),
+        np.asarray(aux["pol"]["logits"], np.float32), **TOL,
+    )

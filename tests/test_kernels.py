@@ -12,10 +12,14 @@ from hypothesis import given, settings, strategies as st
 from repro.kernels.decode_attention.ops import (
     decode_attention,
     paged_decode_attention,
+    paged_tree_decode_attention,
+    tree_decode_attention,
 )
 from repro.kernels.decode_attention.ref import (
     decode_attention_ref,
     paged_decode_attention_ref,
+    paged_tree_decode_attention_ref,
+    tree_decode_attention_ref,
 )
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -163,6 +167,114 @@ def test_paged_decode_attention_ignores_garbage_table_entries():
     out_g = paged_decode_attention(q, pool_k, pool_v, garbled, kv_len)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(out_g), rtol=2e-5, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# tree_decode_attention — A speculative candidates share one prefix read;
+# block-diagonal (identity) tree mask over the speculative tail.
+# ---------------------------------------------------------------------------
+
+TDA_SHAPES = [
+    # (b, s, a, hq, hkv, d, kv_len, bk)
+    (2, 256, 2, 8, 2, 64, 200, 64),
+    (1, 512, 4, 4, 4, 128, 512, 128),
+    (3, 128, 16, 16, 4, 32, 1, 64),
+    (1, 256, 4, 8, 1, 64, 170, 256),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", TDA_SHAPES)
+def test_tree_decode_attention_matches_ref(shape, dtype):
+    b, s, a, hq, hkv, d, kv_len, bk = shape
+    ks = jax.random.split(jax.random.PRNGKey(hash(shape) % 2**31), 5)
+    q = jax.random.normal(ks[0], (b, a, hq, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    ksp = jax.random.normal(ks[3], (b, a, hkv, d), dtype)
+    vsp = jax.random.normal(ks[4], (b, a, hkv, d), dtype)
+    out = tree_decode_attention(q, kc, vc, ksp, vsp, jnp.int32(kv_len),
+                                block_k=bk)
+    ref = tree_decode_attention_ref(q, kc, vc, ksp, vsp, kv_len)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("a", [2, 4, 16])
+def test_tree_decode_attention_ragged_kv_len_matches_ref(dtype, a):
+    """Per-batch [B] prefix lengths — the async slot-cache shape."""
+    b, s, hq, hkv, d, bk = 4, 256, 8, 2, 64, 64
+    ks = jax.random.split(jax.random.PRNGKey(42 + a), 5)
+    q = jax.random.normal(ks[0], (b, a, hq, d), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), dtype)
+    ksp = jax.random.normal(ks[3], (b, a, hkv, d), dtype)
+    vsp = jax.random.normal(ks[4], (b, a, hkv, d), dtype)
+    lens = jnp.asarray([1, 63, 200, 256], jnp.int32)
+    out = tree_decode_attention(q, kc, vc, ksp, vsp, lens, block_k=bk)
+    ref = tree_decode_attention_ref(q, kc, vc, ksp, vsp, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+def test_tree_decode_attention_matches_per_candidate_decode():
+    """Each candidate under the identity mask sees prefix + its OWN tail
+    entry only — identical to running plain decode attention per candidate
+    with that entry appended to the cache."""
+    b, s, a, hq, hkv, d = 2, 128, 4, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    q = jax.random.normal(ks[0], (b, a, hq, d), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    ksp = jax.random.normal(ks[3], (b, a, hkv, d), jnp.float32)
+    vsp = jax.random.normal(ks[4], (b, a, hkv, d), jnp.float32)
+    kv_len = jnp.asarray([100, 64], jnp.int32)
+    out = tree_decode_attention(q, kc, vc, ksp, vsp, kv_len, block_k=64)
+    for i in range(a):
+        kci = kc.at[jnp.arange(b), kv_len].set(ksp[:, i])
+        vci = vc.at[jnp.arange(b), kv_len].set(vsp[:, i])
+        one = decode_attention(q[:, i], kci, vci, kv_len + 1, block_k=64)
+        np.testing.assert_allclose(
+            np.asarray(out[:, i]), np.asarray(one), rtol=2e-5, atol=2e-5,
+            err_msg=f"candidate {i}",
+        )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("a", [2, 4, 16])
+def test_paged_tree_decode_attention_matches_ref(dtype, a):
+    b, hq, hkv, d, bs, npg, P = 4, 8, 2, 64, 16, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(7 * a), 6)
+    q = jax.random.normal(ks[0], (b, a, hq, d), dtype)
+    pool_k = jax.random.normal(ks[1], (P, bs, hkv, d), dtype)
+    pool_v = jax.random.normal(ks[2], (P, bs, hkv, d), dtype)
+    ksp = jax.random.normal(ks[3], (b, a, hkv, d), dtype)
+    vsp = jax.random.normal(ks[4], (b, a, hkv, d), dtype)
+    table = (
+        jax.random.permutation(ks[5], P)[: b * npg]
+        .reshape(b, npg).astype(jnp.int32)
+    )
+    kv_len = jnp.asarray([1, 17, 48, 64], jnp.int32)
+    out = paged_tree_decode_attention(
+        q, pool_k, pool_v, table, ksp, vsp, kv_len
+    )
+    ref = paged_tree_decode_attention_ref(
+        q, pool_k, pool_v, table, ksp, vsp, kv_len
+    )
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+    # ... and against the dense tree kernel over gathered pages.
+    kd = pool_k[table].reshape(b, npg * bs, hkv, d)
+    vd = pool_v[table].reshape(b, npg * bs, hkv, d)
+    dense = tree_decode_attention(q, kd, vd, ksp, vsp, kv_len, block_k=bs)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(dense, np.float32),
+        **_tol(dtype),
     )
 
 

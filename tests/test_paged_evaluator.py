@@ -232,7 +232,7 @@ def test_refill_rollback_matches_fresh_prefill_and_releases_pages(lm):
         length=jnp.asarray(new_len, jnp.int32),
         done=jnp.zeros((n,), jnp.bool_),
     )
-    aux2 = paged.refill_aux(
+    aux2, _ = paged.refill_aux(
         scfg, aux, jnp.arange(n), new_state, jnp.ones((n,), jnp.bool_)
     )
     fresh = paged.init_aux(new_state, (n, 1))
@@ -258,7 +258,7 @@ def test_refill_skips_masked_rows(lm):
         done=jnp.zeros((3,), jnp.bool_),
     )
     mask = jnp.asarray([False, True, False])
-    aux2 = paged.refill_aux(scfg, aux, jnp.arange(3), shallow, mask)
+    aux2, _ = paged.refill_aux(scfg, aux, jnp.arange(3), shallow, mask)
     np.testing.assert_array_equal(
         np.asarray(aux2["len"]), [3, 1, 9]
     )
