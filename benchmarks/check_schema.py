@@ -41,6 +41,11 @@ REQUIRED_FIELDS: dict[str, set[str]] = {
         "top_k", "frontier_hits", "searches_per_sec", "us_per_tick",
     },
     "frontier_speedup": {"top_k", "speedup", "cached_seconds"},
+    "serving_eval": {
+        "requests", "batch", "requests_per_sec", "slot_idle_frac",
+        "admissions", "ticks",
+    },
+    "serving_speedup": {"requests", "speedup", "sequential_seconds"},
 }
 
 

@@ -87,6 +87,7 @@ def main() -> None:
             wave_size=4,
             batch_sizes=(1,) if args.fast else (1, 4),
             depths=(8,) if args.fast else (8, 64),
+            serving_batch=2 if args.fast else 4,
             records=json_records["model_eval"],
         ),
     }

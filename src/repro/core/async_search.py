@@ -57,6 +57,8 @@ class AsyncTickTrace(NamedTuple):
     cache_len: Optional[jax.Array] = None  # i32[K, W] evaluator cache depth
     blocks_in_use: Optional[jax.Array] = None  # i32[K] paged-pool working set
     frontier_hits: Optional[jax.Array] = None  # i32[K] cumulative refill hits
+    busy_slots: Optional[jax.Array] = None  # i32[K] (+[B]) non-FREE slots
+    active_trees: Optional[jax.Array] = None  # i32[K] trees still searching
 
 
 def tick_snapshot(
@@ -72,8 +74,15 @@ def tick_snapshot(
     the engine's cumulative count of refills answered from the evaluator's
     frontier cache (WU-UCT's ``O_s`` accounting absorbing speculative
     visits — the engine never dispatched a forward for them).
+
+    ``busy_slots`` / ``active_trees`` are the occupancy counters the serving
+    layer aggregates into its slot-idle fraction: per tree, how many of the
+    ``W`` slots held in-flight work this tick, and how many trees were still
+    searching at all (settled trees' slots are masked FREE and count zero).
     """
     tree, slots = carry[0], carry[1]
+    alive_i = jnp.asarray(alive, jnp.int32)
+    busy = jnp.sum((slots.kind != FREE).astype(jnp.int32), axis=-1)
     return AsyncTickTrace(
         O=tree.O, parent=tree.parent, kind=slots.kind,
         sim_node=slots.sim_node, t_done=carry[4], alive=alive,
@@ -81,6 +90,8 @@ def tick_snapshot(
         cache_len=cache_len,
         blocks_in_use=blocks,
         frontier_hits=frontier_hits,
+        busy_slots=busy * alive_i,
+        active_trees=jnp.sum(jnp.atleast_1d(alive_i)),
     )
 
 

@@ -22,6 +22,24 @@ at different ticks and a freed slot is refilled immediately.  ``B`` trees ×
   ``lax.cond`` into a select over the whole tree pytree (O(B·M) memory
   traffic per slot refill), while this engine performs masked row updates.
 
+The engine is exposed two ways:
+
+* :func:`run_async_search_batched` — the one-shot API: admit a batch of
+  roots, run every tree to its simulation budget, return ``SearchResult[B]``;
+* :class:`BatchedAsyncEngine` — the *persistent* form the serving layer
+  drives: the same master tick, but the carry outlives any single request.
+  When a tree settles (its ``t_done`` hits the budget) the engine's
+  :meth:`~BatchedAsyncEngine.step` freezes that row; the host then splices a
+  queued request into the row **mid-stream** via
+  :meth:`~BatchedAsyncEngine.admit` — fresh tree, fresh per-tree RNG lane,
+  fresh evaluator slot caches (``Evaluator.admit_aux``: dense KV re-prefill
+  + cache splice, or paged page-table splice + refcount fan-out) — while the
+  other ``B-1`` rows keep searching.  Because every per-row computation
+  (traversal scoring, top-k, the Pallas ``[B, A]`` kernel, per-tree RNG
+  splits) is row-independent, an admitted request's search is equivalent to
+  the same request served in a fresh batch (``tests/test_serving_continuous``
+  asserts visit-mass parity).
+
 The flat ``[B·W]`` slot axis and the ``[B]`` tree axis both shard over the
 ``('pod', 'data')`` mesh axes — pass
 :func:`repro.distributed.sharding.constrain_search_batch` as ``constrain``.
@@ -76,56 +94,87 @@ def _freeze_done(alive: jax.Array, new: Pytree, old: Pytree) -> Pytree:
     )
 
 
-def run_async_search_batched(
-    env: Environment,
-    cfg: SearchConfig,
-    root_states: Pytree,
-    rngs: jax.Array,
-    constrain: Optional[Callable[[Pytree], Pytree]] = None,
-    use_kernel: bool = True,
-    trace_ticks: int = 0,
-    evaluator: Optional[Evaluator] = None,
-) -> SearchResult:
-    """Run ``B`` independent async-slot searches; every field of the returned
-    :class:`SearchResult` carries a leading ``[B]`` axis.
+class BatchedAsyncEngine:
+    """``B``-tree async-slot WU-UCT with a carry that outlives requests.
 
-    ``root_states`` is a pytree whose leaves lead with ``[B]``; ``rngs`` is
-    ``jax.random.split(key, B)``.  With ``trace_ticks > 0`` returns
-    ``(SearchResult, AsyncTickTrace)`` with a ``[K, B, ...]`` trace (see
-    :func:`repro.core.async_search.run_async_search`).  ``evaluator`` owns
-    the flat ``[B·W]`` slot stepping — with
-    :class:`repro.core.evaluators.ModelEvaluator`, every master tick is one
-    batched model forward over all in-flight slots.
+    The master tick (``refill → tick → settle``) is identical to the
+    one-shot :func:`run_async_search_batched` program — that function is a
+    thin wrapper over this class, and the vmap-oracle bit-equivalence tests
+    pin the tick.  What the class adds is slot-level request lifecycle:
+
+    * :meth:`init_carry` — build the loop carry, optionally with some rows
+      born *idle* (``active=False`` rows start with ``t_done == T``, so
+      :meth:`step` freezes them until something is admitted);
+    * :meth:`step` / :meth:`run_segment` — one / up to ``n`` frozen-masked
+      master ticks (settled trees' slots are masked FREE so they stop
+      feeding the evaluator);
+    * :meth:`settled` / :meth:`result` — which rows finished their budget,
+      and the ``SearchResult[B]`` snapshot to harvest them from;
+    * :meth:`admit` — splice fresh requests into settled rows: tree reset
+      (`init_batched_tree` rows scattered in), slot pool reset, per-tree RNG
+      lane overwrite, counters zeroed, and the evaluator's
+      ``admit_aux`` re-seeds the rows' ``W`` slot caches (ragged re-prefill
+      + dense cache splice, or paged page-table splice + refcount fan-out —
+      the shared :mod:`repro.serving.admission` path);
+    * :meth:`evict` — release a settled row's evaluator-side resources
+      (paged caches return their pages to the pool) without admitting a
+      replacement.
+
+    ``admit``/``evict``/``result`` are eager-boundary methods (the serving
+    layer calls them between jitted segments); ``step``/``run_segment`` are
+    pure and jit-safe.
     """
-    W = cfg.wave_size
-    T = cfg.num_simulations
-    width = min(cfg.max_width, env.num_actions)
-    capacity = T + W + 1
-    rngs = _canonical_keys(rngs)
-    B = rngs.shape[0]
-    evaluator = evaluator if evaluator is not None else RolloutEvaluator(env)
-    tree0 = init_batched_tree(root_states, capacity, env.num_actions)
-    bidx = jnp.arange(B)
-    # The single engine ignores deterministic_expansion (always Algorithm 7).
-    exp_cfg = cfg._replace(deterministic_expansion=False)
 
-    def slot_state0() -> _BatchedAsyncSlots:
-        proto = evaluator.init_state(
-            jax.tree.map(lambda x: x[0], root_states), (B, W)
+    def __init__(
+        self,
+        env: Environment,
+        cfg: SearchConfig,
+        batch: int,
+        *,
+        evaluator: Optional[Evaluator] = None,
+        constrain: Optional[Callable[[Pytree], Pytree]] = None,
+        use_kernel: bool = True,
+    ):
+        self.env = env
+        self.cfg = cfg
+        self.B = int(batch)
+        self.W = cfg.wave_size
+        self.T = cfg.num_simulations
+        self.width = min(cfg.max_width, env.num_actions)
+        self.capacity = cfg.num_simulations + cfg.wave_size + 1
+        self.evaluator = (
+            evaluator if evaluator is not None else RolloutEvaluator(env)
+        )
+        self.constrain = constrain
+        self.use_kernel = use_kernel
+        self._bidx = jnp.arange(self.B)
+        # The single engine ignores deterministic_expansion (Algorithm 7).
+        self._exp_cfg = cfg._replace(deterministic_expansion=False)
+
+    # ------------------------------------------------------------------
+    # Slot pool
+    # ------------------------------------------------------------------
+    def _slot_rows0(self, root_states, rows: int) -> _BatchedAsyncSlots:
+        """Fresh slot-pool rows (all FREE) for ``rows`` trees."""
+        proto = self.evaluator.init_state(
+            jax.tree.map(lambda x: x[0], root_states), (rows, self.W)
         )
         return _BatchedAsyncSlots(
-            kind=jnp.zeros((B, W), jnp.int32),
-            sim_node=jnp.zeros((B, W), jnp.int32),
-            act=jnp.zeros((B, W), jnp.int32),
+            kind=jnp.zeros((rows, self.W), jnp.int32),
+            sim_node=jnp.zeros((rows, self.W), jnp.int32),
+            act=jnp.zeros((rows, self.W), jnp.int32),
             state=proto,
-            rollout_done=jnp.zeros((B, W), jnp.bool_),
-            acc=jnp.zeros((B, W), jnp.float32),
-            disc=jnp.ones((B, W), jnp.float32),
-            steps=jnp.zeros((B, W), jnp.int32),
+            rollout_done=jnp.zeros((rows, self.W), jnp.bool_),
+            acc=jnp.zeros((rows, self.W), jnp.float32),
+            disc=jnp.ones((rows, self.W), jnp.float32),
+            steps=jnp.zeros((rows, self.W), jnp.int32),
         )
 
-    def set_slot(slots: _BatchedAsyncSlots, j, mask, **kw) -> _BatchedAsyncSlots:
+    def _set_slot(
+        self, slots: _BatchedAsyncSlots, j, mask, **kw
+    ) -> _BatchedAsyncSlots:
         """Write slot column ``j`` for trees where ``mask`` holds."""
+        B = self.B
         upd = {}
         for f in slots._fields:
             v = getattr(slots, f)
@@ -150,17 +199,19 @@ def run_async_search_batched(
     # ------------------------------------------------------------------
     # Master tick
     # ------------------------------------------------------------------
-    def refill(carry):
+    def _refill(self, carry):
         """Fill each tree's FREE slots with fresh selections — slot ``j`` of
         all ``B`` trees fills simultaneously, one [B, A] kernel call per
         traversal level."""
+        B, W, T, cfg = self.B, self.W, self.T, self.cfg
+        bidx = self._bidx
 
         def body(j, c):
             tree, slots, rng, t_launch, t_done, aux, fr_hits = c
             rng, k_t, k_e = _split_each(rng, 3)
             want = (slots.kind[:, j] == FREE) & (t_launch < T)
 
-            nodes = traverse_batched(tree, k_t, cfg, use_kernel)
+            nodes = traverse_batched(tree, k_t, cfg, self.use_kernel)
             kids = tree.children[bidx, nodes]
             n_tried = jnp.sum((kids >= 0).astype(jnp.int32), axis=1)
             is_term = tree.terminal[bidx, nodes]
@@ -168,9 +219,9 @@ def run_async_search_batched(
             needs_exp = (
                 jnp.logical_not(is_term)
                 & jnp.logical_not(at_depth)
-                & (n_tried < width)
+                & (n_tried < self.width)
             )
-            act = _expansion_actions(tree, nodes, k_e, exp_cfg)
+            act = _expansion_actions(tree, nodes, k_e, self._exp_cfg)
             tree, child, reserved = btree.reserve_children(
                 tree, nodes, act, mask=want & needs_exp
             )
@@ -187,12 +238,12 @@ def run_async_search_batched(
             parent_state = btree.get_state(tree, nodes)
             # Re-sync the evaluator's slot caches: slot column j of every
             # tree lives at flat row b·W + j of the aux pool.
-            aux, hit = evaluator.refill_aux(
+            aux, hit = self.evaluator.refill_aux(
                 cfg, aux, bidx * W + j, parent_state,
                 want & jnp.logical_not(is_term),
             )
             fr_hits = fr_hits + hit.astype(jnp.int32)
-            slots = set_slot(
+            slots = self._set_slot(
                 slots,
                 j,
                 want,
@@ -213,10 +264,11 @@ def run_async_search_batched(
 
         return jax.lax.fori_loop(0, W, body, carry)
 
-    def tick(slots: _BatchedAsyncSlots, rng, aux):
+    def _tick(self, slots: _BatchedAsyncSlots, rng, aux):
         """Advance every busy slot by one env step — vmapped over the flat
         [B·W] axis, forming one rollout batch (the future model-forward
         hook); shards over ('pod', 'data') via ``constrain``."""
+        B, W = self.B, self.W
         keys = jax.vmap(lambda k: jax.random.split(k, W))(rng)   # [B, W, ...]
 
         def flat(x):
@@ -228,13 +280,13 @@ def run_async_search_batched(
             flat(slots.rollout_done), flat(slots.acc), flat(slots.disc),
             flat(slots.steps), flat(keys),
         )
-        if constrain is not None:
-            args = constrain(args)
+        if self.constrain is not None:
+            args = self.constrain(args)
         # aux stays outside `constrain`: model-cache leaves lead with the
         # layer axis, not the slot axis the hook shards.
-        out, aux = evaluator.tick(cfg, *args, aux)
-        if constrain is not None:
-            out = constrain(out)
+        out, aux = self.evaluator.tick(self.cfg, *args, aux)
+        if self.constrain is not None:
+            out = self.constrain(out)
         out = jax.tree.map(lambda x: x.reshape((B, W) + x.shape[1:]), out)
         new_state, r_edge, done_edge, acc, disc, steps, rollout_done = out
         slots = slots._replace(
@@ -243,8 +295,9 @@ def run_async_search_batched(
         )
         return slots, r_edge, done_edge, aux
 
-    def settle_finished(carry, r_edge, done_edge):
+    def _settle_finished(self, carry, r_edge, done_edge):
         """EXPAND→SIM transitions (finalize child) + completed rollouts."""
+        cfg = self.cfg
 
         def body(j, c):
             tree, slots, t_done = c
@@ -274,27 +327,32 @@ def run_async_search_batched(
             )
             return tree, slots, t_done + fin.astype(jnp.int32)
 
-        return jax.lax.fori_loop(0, W, body, carry)
+        return jax.lax.fori_loop(0, self.W, body, carry)
 
-    def cond(carry):
-        return carry[4] < T          # t_done, per tree
+    def alive(self, carry) -> jax.Array:
+        """bool[B] — trees still short of their simulation budget."""
+        return carry[4] < self.T          # t_done, per tree
 
-    def master_iter(carry):
+    def settled(self, carry) -> jax.Array:
+        """bool[B] — trees whose search finished (harvest/admit targets)."""
+        return carry[4] >= self.T
+
+    def _master_iter(self, carry):
         tree, slots, rng, t_launch, t_done, ticks, max_o, aux, fr_hits = carry
         rng, k_tick = _split_each(rng, 2)
-        tree, slots, rng, t_launch, t_done, aux, fr_hits = refill(
+        tree, slots, rng, t_launch, t_done, aux, fr_hits = self._refill(
             (tree, slots, rng, t_launch, t_done, aux, fr_hits)
         )
         max_o = jnp.maximum(max_o, tree.O[:, 0])
-        slots, r_edge, done_edge, aux = tick(slots, k_tick, aux)
-        tree, slots, t_done = settle_finished(
+        slots, r_edge, done_edge, aux = self._tick(slots, k_tick, aux)
+        tree, slots, t_done = self._settle_finished(
             (tree, slots, t_done), r_edge, done_edge
         )
         return (
             tree, slots, rng, t_launch, t_done, ticks + 1, max_o, aux, fr_hits
         )
 
-    def step(carry):
+    def step(self, carry):
         """One master tick with finished trees frozen — the same per-lane
         masking ``vmap`` would apply to the single engine's while_loop.
 
@@ -310,16 +368,19 @@ def run_async_search_batched(
         tick and starve the live trees.  Tree-side writes were already
         masked (``want`` is false once ``t_launch >= T``), slot outputs are
         frozen from ``carry``, and the RNG split structure is untouched, so
-        the vmap-oracle bit-equivalence is preserved.
+        the vmap-oracle bit-equivalence is preserved.  The same property
+        makes settled rows safe *admission targets*: a frozen row's state is
+        exactly its state at settle time, so the serving layer can harvest
+        and overwrite it between any two ticks.
         """
-        alive = cond(carry)
+        alive = self.alive(carry)
         slots_in = carry[1]
         masked = slots_in._replace(
             kind=jnp.where(alive[:, None], slots_in.kind, FREE).astype(
                 jnp.int32
             )
         )
-        new = master_iter((carry[0], masked) + carry[2:])
+        new = self._master_iter((carry[0], masked) + carry[2:])
         # aux rides outside the freeze (above); the per-tree frontier-hit
         # counter rides after it and freezes with a plain where — its hits
         # are already masked by ``want``, so dead lanes never advance.
@@ -327,44 +388,176 @@ def run_async_search_batched(
             new[-2], jnp.where(alive, new[-1], carry[-1]),
         )
 
-    init = (
-        tree0, slot_state0(), rngs,
-        jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.int32),
-        jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
-        evaluator.init_aux(root_states, (B, W)), jnp.zeros((B,), jnp.int32),
-    )
-    if trace_ticks > 0:
-        def scan_body(carry, _):
-            alive = cond(carry)
-            new = step(carry)
-            ev_len = evaluator.aux_len(new[7])
-            if ev_len is not None:
-                ev_len = ev_len.reshape(B, W)
-            return new, tick_snapshot(
-                new, alive, ev_len, evaluator.aux_blocks(new[7]),
-                frontier_hits=new[8],
-            )
+    # ------------------------------------------------------------------
+    # Request lifecycle (the serving layer's surface)
+    # ------------------------------------------------------------------
+    def init_carry(self, root_states, rngs, active=None):
+        """Build the master-loop carry for ``B`` root states.
 
-        final, trace = jax.lax.scan(scan_body, init, None, length=trace_ticks)
-        tree, slots, _, _, _, ticks, max_o, _, _ = final
-    else:
-        trace = None
-        tree, slots, _, _, _, ticks, max_o, _, _ = jax.lax.while_loop(
-            lambda c: jnp.any(cond(c)), step, init
+        ``rngs`` is ``jax.random.split(key, B)``.  ``active`` (bool[B],
+        optional) marks rows that carry a real request; inactive rows are
+        born settled (``t_launch == t_done == T``) so :meth:`step` freezes
+        them — they hold placeholder state until :meth:`admit` splices a
+        request in.  Callers with idle paged rows should :meth:`evict` them
+        after init so their placeholder prefill pages return to the pool.
+        """
+        B, W, T = self.B, self.W, self.T
+        rngs = _canonical_keys(rngs)
+        tree0 = init_batched_tree(
+            root_states, self.capacity, self.env.num_actions
+        )
+        if active is None:
+            start = jnp.zeros((B,), jnp.int32)
+        else:
+            start = jnp.where(jnp.asarray(active), 0, T).astype(jnp.int32)
+        return (
+            tree0, self._slot_rows0(root_states, B), rngs,
+            start, start,
+            jnp.zeros((B,), jnp.int32), jnp.zeros((B,), jnp.float32),
+            self.evaluator.init_aux(root_states, (B, W)),
+            jnp.zeros((B,), jnp.int32),
         )
 
-    root_n, root_v = btree.root_action_stats(tree)
-    result = SearchResult(
-        action=btree.best_root_action(tree),
-        root_n=root_n,
-        root_v=root_v,
-        tree_size=tree.size,
-        dup_selections=jnp.zeros((B,), jnp.float32),
-        max_o=max_o,
-        overflowed=tree.overflowed,
-        ticks=ticks,
+    def admit(self, carry, rows, root_states, rngs):
+        """Splice fresh requests into settled rows, mid-stream.
+
+        ``rows`` is ``i32[R]`` (distinct, settled or idle); ``root_states``
+        leaves lead with ``[R]``; ``rngs`` is ``jax.random.split(key, R)``.
+        Resets the rows' trees, slot pools, RNG lanes and counters, and
+        re-seeds their evaluator slot caches via ``Evaluator.admit_aux``
+        (dense: one ragged re-prefill + slot-axis cache splice; paged:
+        release + page-table splice + refcount fan-out to the ``W``
+        siblings).  Rows not in ``rows`` are untouched — their searches
+        continue across the splice.
+        """
+        tree, slots, rng, t_launch, t_done, ticks, max_o, aux, fr_hits = carry
+        rows = jnp.asarray(rows, jnp.int32)
+        r = rows.shape[0]
+        tree_new = init_batched_tree(
+            root_states, self.capacity, self.env.num_actions
+        )
+        tree = jax.tree.map(
+            lambda f, n: f.at[rows].set(n), tree, tree_new
+        )
+        slots = jax.tree.map(
+            lambda f, n: f.at[rows].set(n),
+            slots, self._slot_rows0(root_states, r),
+        )
+        zero = jnp.zeros((r,), jnp.int32)
+        return (
+            tree, slots, rng.at[rows].set(_canonical_keys(rngs)),
+            t_launch.at[rows].set(zero), t_done.at[rows].set(zero),
+            ticks.at[rows].set(zero),
+            max_o.at[rows].set(jnp.zeros((r,), jnp.float32)),
+            self.evaluator.admit_aux(self.cfg, aux, rows, root_states, self.W),
+            fr_hits.at[rows].set(zero),
+        )
+
+    def evict(self, carry, rows):
+        """Release settled rows' evaluator-side resources without admitting.
+
+        Paged evaluators return the rows' pages to the shared pool (their
+        slots are frozen FREE, so nothing dereferences the dropped tables);
+        dense evaluators are a no-op — an idle dense row costs nothing
+        beyond its preallocated HBM.  Tree/slot/RNG state is left in place:
+        :meth:`result` stays readable until the row is re-admitted.
+        """
+        rows = jnp.asarray(rows, jnp.int32)
+        aux = self.evaluator.evict_aux(carry[7], rows, self.W)
+        return carry[:7] + (aux,) + carry[8:]
+
+    def run_segment(self, carry, num_ticks: int):
+        """Up to ``num_ticks`` master ticks; stops early when all settled.
+
+        Returns ``(carry, ticks_run, busy_tree_ticks)`` — the occupancy
+        numerator/denominator the serving layer turns into its slot-idle
+        fraction (a settled row's ``W`` slots idle for the rest of the
+        segment; ``busy_tree_ticks`` counts row-ticks that searched).
+        """
+        def cond(c):
+            carry, t, _ = c
+            return (t < num_ticks) & jnp.any(self.alive(carry))
+
+        def body(c):
+            carry, t, busy = c
+            busy = busy + jnp.sum(self.alive(carry).astype(jnp.int32))
+            return self.step(carry), t + 1, busy
+
+        carry, t, busy = jax.lax.while_loop(
+            cond, body, (carry, jnp.int32(0), jnp.int32(0))
+        )
+        return carry, t, busy
+
+    def result(self, carry) -> SearchResult:
+        """``SearchResult[B]`` snapshot (meaningful on settled rows)."""
+        tree = carry[0]
+        root_n, root_v = btree.root_action_stats(tree)
+        return SearchResult(
+            action=btree.best_root_action(tree),
+            root_n=root_n,
+            root_v=root_v,
+            tree_size=tree.size,
+            dup_selections=jnp.zeros((self.B,), jnp.float32),
+            max_o=carry[6],
+            overflowed=tree.overflowed,
+            ticks=carry[5],
+        )
+
+    # ------------------------------------------------------------------
+    # One-shot runs (the pre-existing API)
+    # ------------------------------------------------------------------
+    def run(self, root_states, rngs, trace_ticks: int = 0):
+        """Admit ``B`` roots, run every tree to budget, return results."""
+        init = self.init_carry(root_states, rngs)
+        if trace_ticks > 0:
+            def scan_body(carry, _):
+                alive = self.alive(carry)
+                new = self.step(carry)
+                ev_len = self.evaluator.aux_len(new[7])
+                if ev_len is not None:
+                    ev_len = ev_len.reshape(self.B, self.W)
+                return new, tick_snapshot(
+                    new, alive, ev_len, self.evaluator.aux_blocks(new[7]),
+                    frontier_hits=new[8],
+                )
+
+            final, trace = jax.lax.scan(
+                scan_body, init, None, length=trace_ticks
+            )
+            return self.result(final), trace
+        final = jax.lax.while_loop(
+            lambda c: jnp.any(self.alive(c)), self.step, init
+        )
+        return self.result(final)
+
+
+def run_async_search_batched(
+    env: Environment,
+    cfg: SearchConfig,
+    root_states: Pytree,
+    rngs: jax.Array,
+    constrain: Optional[Callable[[Pytree], Pytree]] = None,
+    use_kernel: bool = True,
+    trace_ticks: int = 0,
+    evaluator: Optional[Evaluator] = None,
+) -> SearchResult:
+    """Run ``B`` independent async-slot searches; every field of the returned
+    :class:`SearchResult` carries a leading ``[B]`` axis.
+
+    ``root_states`` is a pytree whose leaves lead with ``[B]``; ``rngs`` is
+    ``jax.random.split(key, B)``.  With ``trace_ticks > 0`` returns
+    ``(SearchResult, AsyncTickTrace)`` with a ``[K, B, ...]`` trace (see
+    :func:`repro.core.async_search.run_async_search`).  ``evaluator`` owns
+    the flat ``[B·W]`` slot stepping — with
+    :class:`repro.core.evaluators.ModelEvaluator`, every master tick is one
+    batched model forward over all in-flight slots.
+    """
+    rngs = _canonical_keys(rngs)
+    engine = BatchedAsyncEngine(
+        env, cfg, rngs.shape[0],
+        evaluator=evaluator, constrain=constrain, use_kernel=use_kernel,
     )
-    return (result, trace) if trace_ticks > 0 else result
+    return engine.run(root_states, rngs, trace_ticks)
 
 
 def make_batched_async_searcher(

@@ -79,6 +79,19 @@ def slot_accounting(gamma, kind, nxt, state, r, done, rollout_done, acc, disc,
     return new_state, r, done, acc, disc, steps, rollout_done
 
 
+def _flat_slot_rows(rows, w: int) -> jax.Array:
+    """Flat aux rows ``[R·w]`` covering tree rows' ``w`` sibling slots.
+
+    Slot ``j`` of tree ``b`` lives at flat aux row ``b·w + j`` — the layout
+    both async engines address ``refill_aux`` with; admission/eviction hooks
+    expand their per-tree ``rows`` through this.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    return (
+        rows[:, None] * w + jnp.arange(w, dtype=jnp.int32)[None, :]
+    ).reshape(-1)
+
+
 class Evaluator:
     """Protocol for environment/model evaluation inside a search engine.
 
@@ -128,6 +141,32 @@ class Evaluator:
     def refill_aux(self, cfg, aux, rows, new_state, mask):
         del cfg, new_state, mask
         return aux, jnp.zeros(jnp.shape(rows), jnp.bool_)
+
+    def admit_aux(self, cfg, aux, rows, root_states, w):
+        """Re-seed the slot caches of freshly admitted *tree* rows.
+
+        The engine-side half of continuous batching: when the serving layer
+        splices a new request into settled tree row ``b``, flat aux rows
+        ``b·w .. b·w + w - 1`` must be rebuilt from the request's root state
+        (``rows`` is ``i32[R]`` tree rows; ``root_states`` leaves lead with
+        ``[R]``; ``w`` is the engine's slot count per tree).  Cached
+        evaluators re-prefill the roots and splice the rows in via the
+        shared :mod:`repro.serving.admission` path; stateless evaluators
+        need nothing.  Called at an eager boundary (between jitted
+        segments), so paged implementations may surface pool exhaustion.
+        """
+        del cfg, rows, root_states, w
+        return aux
+
+    def evict_aux(self, aux, rows, w):
+        """Release aux resources held by settled tree rows ``rows``.
+
+        Paged caches return the rows' pages to the shared pool; evaluators
+        without pooled resources need nothing (a dense row's HBM is
+        preallocated either way).
+        """
+        del rows, w
+        return aux
 
     def aux_len(self, aux) -> Optional[jax.Array]:
         del aux
@@ -673,6 +712,45 @@ class CachedModelEvaluator(ModelEvaluator):
         sub = self._catch_up(sub, target, r, s_max)
         return self._put_rows(aux, rows, sub), jnp.zeros((r,), jnp.bool_)
 
+    def admit_aux(self, cfg, aux, rows, root_states, w):
+        """Mid-stream admission: re-prefill + slot-axis cache splice.
+
+        One ragged batched prefill over the ``R`` admitted roots
+        (:mod:`repro.serving.admission`'s shared forward), fanned out to the
+        rows' ``w`` sibling slots with a repeat along the cache's slot axis
+        — the dense twin of the serving engine's ``add_requests`` splice.
+        """
+        del cfg
+        from ..models import init_cache
+        from ..serving.admission import splice_dense_slots
+
+        flat = _flat_slot_rows(rows, w)
+        tokens = jnp.asarray(root_states.tokens, jnp.int32)
+        lengths = jnp.asarray(root_states.length, jnp.int32)
+        r = tokens.shape[0]
+        s_max = aux["tokens"].shape[-1]
+        out = dict(
+            aux,
+            tokens=aux["tokens"].at[flat].set(jnp.repeat(tokens, w, axis=0)),
+            len=aux["len"].at[flat].set(jnp.repeat(lengths, w, axis=0)),
+        )
+        for key, params, mcfg in self._branches():
+            b = aux[key]
+            logits, cache = self.prefill_fn(
+                params, mcfg, tokens, lengths, init_cache(mcfg, r, s_max)
+            )
+            cache.pop("len")
+            out[key] = {
+                "cache": splice_dense_slots(
+                    b["cache"], flat,
+                    jax.tree.map(lambda x: jnp.repeat(x, w, axis=1), cache),
+                ),
+                "logits": b["logits"].at[flat].set(
+                    jnp.repeat(logits, w, axis=0)
+                ),
+            }
+        return out
+
     def _catch_up(self, sub, target, r, s_max):
         """Re-decode each row's divergent suffix in batched ragged chunks.
 
@@ -1074,6 +1152,104 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
         sub = self._paged_catch_up(sub, target, r, s_max)
         return self._put_rows(aux, rows, sub), jnp.zeros((r,), jnp.bool_)
 
+    def admit_aux(self, cfg, aux, rows, root_states, w):
+        """Mid-stream admission: page release → re-prefill → table splice.
+
+        The rows' slots first return everything they still hold to the pool
+        (rows evicted earlier hold nothing — their ``len`` is zero, so the
+        release is a no-op and pages are never double-freed).  Each admitted
+        root then prefills ONCE (the shared
+        :mod:`repro.serving.admission` ragged forward), its dense rows
+        scatter into freshly allocated pool pages
+        (:func:`repro.serving.admission.splice_pool_pages`), and all ``w``
+        sibling slots' tables point at the same pages with refcount ``w`` —
+        the same prefix-sharing layout ``init_aux`` builds at cold start.
+        Runs at an eager boundary, so exhaustion raises
+        :class:`repro.models.PagePoolExhaustedError` immediately.
+        """
+        del cfg
+        from ..models import alloc_blocks, init_cache, release_pages
+        from ..serving.admission import splice_pool_pages
+
+        flat = _flat_slot_rows(rows, w)
+        tokens = jnp.asarray(root_states.tokens, jnp.int32)
+        lengths = jnp.asarray(root_states.length, jnp.int32)
+        r = tokens.shape[0]
+        bs, p = self.block_size, self.num_blocks
+        mp = aux["table"].shape[1]
+
+        hi = (aux["len"][flat] + bs - 1) // bs
+        refcount = release_pages(
+            aux["refcount"], aux["table"][flat], jnp.zeros_like(hi), hi
+        )
+
+        # Fresh page schedule: one block per root page, fanned out to the w
+        # sibling slots (alloc_blocks hands out refcount 1; the fan-out adds
+        # the other w - 1 sharers).
+        p_r = (lengths + bs - 1) // bs
+        dst = jnp.full((r, mp), p, jnp.int32)
+        oom = aux["oom"]
+        for pi in range(mp):
+            need = pi < p_r
+            blocks, refcount, n_fail = alloc_blocks(refcount, need)
+            dst = dst.at[:, pi].set(
+                jnp.where(need & (blocks < p), blocks, p)
+            )
+            oom = oom + n_fail
+        refcount = refcount.at[dst.reshape(-1)].add(
+            jnp.where((dst < p).reshape(-1), w - 1, 0), mode="drop"
+        )
+
+        out = dict(
+            aux,
+            tokens=aux["tokens"].at[flat].set(jnp.repeat(tokens, w, axis=0)),
+            len=aux["len"].at[flat].set(jnp.repeat(lengths, w, axis=0)),
+            table=aux["table"].at[flat].set(jnp.repeat(dst, w, axis=0)),
+            refcount=refcount,
+            oom=oom,
+        )
+        for key, params, mcfg in self._branches():
+            b = aux[key]
+            logits, cache = self.prefill_fn(
+                params, mcfg, tokens, lengths, init_cache(mcfg, r, mp * bs)
+            )
+            kv = cache["kv"]
+            pk, pv = splice_pool_pages(b["k"], b["v"], kv["k"], kv["v"], dst)
+            out[key] = {
+                "k": pk, "v": pv,
+                "logits": b["logits"].at[flat].set(
+                    jnp.repeat(logits, w, axis=0)
+                ),
+            }
+        self._maybe_raise(out["oom"])
+        return out
+
+    def evict_aux(self, aux, rows, w):
+        """Return settled rows' pages to the pool without admitting.
+
+        Tables drop to the sentinel and ``len`` to zero, so the rows' frozen
+        FREE slots never dereference a released block (garbage-table
+        entries are clipped + len-masked by the decode path regardless),
+        and a later :meth:`admit_aux` release of the same rows is a no-op.
+        """
+        from ..models import release_pages
+
+        flat = _flat_slot_rows(rows, w)
+        bs = self.block_size
+        mp = aux["table"].shape[1]
+        hi = (aux["len"][flat] + bs - 1) // bs
+        refcount = release_pages(
+            aux["refcount"], aux["table"][flat], jnp.zeros_like(hi), hi
+        )
+        return dict(
+            aux,
+            refcount=refcount,
+            table=aux["table"].at[flat].set(
+                jnp.full((flat.shape[0], mp), self.num_blocks, jnp.int32)
+            ),
+            len=aux["len"].at[flat].set(0),
+        )
+
     def _paged_catch_up(self, sub, target, r, s_max):
         """Chunked divergent-suffix re-decode over paged rows.
 
@@ -1312,6 +1488,26 @@ class _FrontierMixin:
             "pol": br(fr["pol"], sfr["pol"]),
             "rew": br(fr["rew"], sfr["rew"]),
         }
+        return out
+
+    def admit_aux(self, cfg, aux, rows, root_states, w):
+        """Admission invalidates the rows' frontier snapshots: they were
+        taken against the previous request's tree and must never answer the
+        new request's refills.  ``_take_rows``/``_put_rows`` thread ``fr``
+        through the base splice, so only the validity bit needs clearing."""
+        fr = aux["fr"]
+        out = super().admit_aux(cfg, dict(aux, fr=()), rows, root_states, w)
+        out["fr"] = dict(
+            fr, valid=fr["valid"].at[_flat_slot_rows(rows, w)].set(False)
+        )
+        return out
+
+    def evict_aux(self, aux, rows, w):
+        fr = aux["fr"]
+        out = super().evict_aux(dict(aux, fr=()), rows, w)
+        out["fr"] = dict(
+            fr, valid=fr["valid"].at[_flat_slot_rows(rows, w)].set(False)
+        )
         return out
 
     def _fr_record(self, fr, pre_tokens, length, cand, is_exp):

@@ -1,4 +1,14 @@
+from .admission import PromptTooLongError, pack_prompts, validate_prompts
 from .engine import ServeConfig, ServingEngine
-from .search_service import SearchService
+from .search_service import InvalidSearchActionError, SearchService, ServeStats
 
-__all__ = ["SearchService", "ServeConfig", "ServingEngine"]
+__all__ = [
+    "InvalidSearchActionError",
+    "PromptTooLongError",
+    "SearchService",
+    "ServeConfig",
+    "ServeStats",
+    "ServingEngine",
+    "pack_prompts",
+    "validate_prompts",
+]

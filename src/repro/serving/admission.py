@@ -1,0 +1,142 @@
+"""Shared request-admission path for both serving engines.
+
+Two engines admit prompts into slot-shaped KV state mid-flight:
+
+* :class:`repro.serving.engine.ServingEngine` — plain continuous-batching
+  decode: a freed slot takes the next queued prompt;
+* the batched async search engine behind
+  :class:`repro.serving.search_service.SearchService` — a settled root's
+  ``B``-row takes the next queued *search* request, re-seeding its tree, its
+  per-tree RNG and all ``W`` evaluator slot caches.
+
+Both paths are the same three steps, implemented once here: **validate** the
+prompt against the slot's ``[max_len]`` cache row, **prefill** the admitted
+prompts in one right-padded ragged batched forward
+(``models.prefill_ragged`` — each prompt's cache fills at its own length),
+and **splice** the resulting rows into the live engine state (dense:
+slot-axis scatter; paged: block scatter behind a page-table edit).  The
+evaluator-side admission hooks (``Evaluator.admit_aux``) and the decode
+engine's ``add_requests`` both route through these helpers, so the KV-cache
+contract (garbage rows beyond ``len``; see README) is enforced in one place.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+
+
+class PromptTooLongError(ValueError):
+    """A prompt does not fit its engine's ``[max_len]`` slot cache row.
+
+    Admitting it anyway would write past the row in the dense layout (ragged
+    prefill scatters at positions ``>= max_len``) and miscount pages in the
+    paged layout — so admission rejects it up front, by name.
+    """
+
+
+def validate_prompts(
+    prompts: Sequence[Sequence[int]], max_len: int
+) -> None:
+    """Reject prompts that cannot legally occupy a ``[max_len]`` slot.
+
+    A prompt needs ``len(p) < max_len`` — room for at least one generated
+    token — and at least one token of its own (an empty prompt has no
+    position to prefill or decode from).
+    """
+    empty = [i for i, p in enumerate(prompts) if len(p) == 0]
+    if empty:
+        raise ValueError(f"prompts {empty} are empty")
+    too_long = [i for i, p in enumerate(prompts) if len(p) >= max_len]
+    if too_long:
+        raise PromptTooLongError(
+            f"prompts {too_long} have length >= max_len={max_len}; "
+            "leave room for at least one generated token"
+        )
+
+
+def pack_prompts(
+    prompts: Sequence[Sequence[int]], pad_to: Optional[int] = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad a prompt list into ``(tokens [R, S], lengths [R])``.
+
+    ``S`` is the longest prompt, rounded up to a multiple of ``pad_to`` when
+    given (paged admission pads to whole blocks so prefill rows reshape into
+    pool pages exactly).
+    """
+    lengths = np.asarray([len(p) for p in prompts], np.int32)
+    s = int(lengths.max())
+    if pad_to is not None:
+        s = -(-s // pad_to) * pad_to
+    tokens = np.zeros((len(prompts), s), np.int32)
+    for i, p in enumerate(prompts):
+        tokens[i, : len(p)] = p
+    return tokens, lengths
+
+
+def ragged_prefill(
+    params, cfg: ModelConfig, tokens, lengths, s_pad: int, prefill_fn=None
+):
+    """One ragged batched prefill into a fresh ``[R, s_pad]`` dense cache.
+
+    Returns ``(logits [R, V], cache)`` — logits at each row's own last valid
+    position, cache rows valid up to each row's length (garbage beyond, per
+    the KV contract).  The one forward both admission paths share.
+    """
+    from ..models import init_cache, prefill_ragged
+
+    if prefill_fn is None:
+        prefill_fn = prefill_ragged
+    r = jnp.shape(tokens)[0]
+    return prefill_fn(
+        params, cfg, jnp.asarray(tokens, jnp.int32),
+        jnp.asarray(lengths, jnp.int32), init_cache(cfg, r, s_pad),
+    )
+
+
+def splice_dense_slots(cache, slots, cache_new):
+    """Scatter freshly prefilled cache rows into an engine cache's slots.
+
+    Layer-stacked leaves carry the slot axis at position 1 (``[L, N, ...]``);
+    scalar leaves (a uniform ``len``) pass through.  ``slots`` is ``i32[R]``
+    and ``cache_new`` leaves carry ``R`` at position 1.
+    """
+    return jax.tree.map(
+        lambda f, o: (
+            f.at[:, slots].set(o)
+            if hasattr(f, "ndim") and f.ndim > 1 else f
+        ),
+        cache,
+        cache_new,
+    )
+
+
+def splice_pool_pages(pool_k, pool_v, dense_k, dense_v, dst):
+    """Scatter dense ragged-prefill rows into a shared KV block pool.
+
+    ``dense_k/v``: ``[L, R, S_pad, Hkv, D]`` with ``S_pad`` a multiple of
+    the pool's block size; ``dst``: ``i32[R, S_pad // block_size]`` block
+    ids per logical page (sentinel ``num_blocks`` entries drop out of the
+    scatter).  The page-table analogue of :func:`splice_dense_slots` — the
+    caller owns the table edit and refcounts.
+    """
+    l_, r_, s_, hk, hd = dense_k.shape
+    npg = dst.shape[1]
+    bs = s_ // npg
+    flat = dst.reshape(-1)
+    kd = dense_k.reshape(l_, r_ * npg, bs, hk, hd)
+    vd = dense_v.reshape(l_, r_ * npg, bs, hk, hd)
+    return (
+        pool_k.at[:, flat].set(kd.astype(pool_k.dtype), mode="drop"),
+        pool_v.at[:, flat].set(vd.astype(pool_v.dtype), mode="drop"),
+    )
+
+
+def pages_needed(length: int, block_size: int) -> int:
+    """Logical pages a prefix of ``length`` tokens occupies."""
+    return -(-int(length) // block_size)

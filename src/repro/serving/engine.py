@@ -38,6 +38,15 @@ from ..models import (
     prefill_ragged,
 )
 from ..models.config import ModelConfig
+from .admission import (
+    PromptTooLongError,
+    pack_prompts,
+    splice_dense_slots,
+    splice_pool_pages,
+    validate_prompts,
+)
+
+__all__ = ["ServeConfig", "ServingEngine", "PromptTooLongError"]
 
 
 @dataclasses.dataclass
@@ -110,21 +119,12 @@ class ServingEngine:
     def _splice_pages(self, pool_k, pool_v, dense_k, dense_v, dst):
         """Splice a dense ragged-prefill cache into the shared pool.
 
-        ``dense_k/v``: ``[L, take, S_pad, Hkv, D]`` with ``S_pad`` a multiple
-        of ``block_size``; ``dst``: i32[take, S_pad // block_size] block ids
-        (sentinel ``num_blocks`` entries drop out of the scatter).  This is
-        the page-table analogue of the dense engine's slot-scatter splice.
+        Delegates to the shared admission path
+        (:func:`repro.serving.admission.splice_pool_pages`) — the same
+        scatter :class:`repro.core.evaluators.PagedCachedModelEvaluator`
+        uses when the batched search engine admits a request mid-run.
         """
-        l_, t_, s_, hk, hd = dense_k.shape
-        bs = self.sc.block_size
-        npg = s_ // bs
-        flat = dst.reshape(-1)
-        kd = dense_k.reshape(l_, t_ * npg, bs, hk, hd)
-        vd = dense_v.reshape(l_, t_ * npg, bs, hk, hd)
-        return (
-            pool_k.at[:, flat].set(kd.astype(pool_k.dtype), mode="drop"),
-            pool_v.at[:, flat].set(vd.astype(pool_v.dtype), mode="drop"),
-        )
+        return splice_pool_pages(pool_k, pool_v, dense_k, dense_v, dst)
 
     def _release_slot_pages(self, slot: int) -> None:
         row = self._table[slot]
@@ -148,8 +148,11 @@ class ServingEngine:
         the state), so they keep the per-prompt prefill loop.
 
         Returns one slot id (or ``None`` once slots ran out) per prompt, in
-        order.
+        order.  Prompts that cannot fit a ``[max_len]`` slot raise
+        :class:`repro.serving.admission.PromptTooLongError` up front —
+        admitting one would write past the dense cache row / miscount pages.
         """
+        validate_prompts(prompts, self.sc.max_len)
         free = np.flatnonzero(~self.active)
         take = min(len(free), len(prompts))
         admitted: list[Optional[int]] = [None] * len(prompts)
@@ -169,15 +172,11 @@ class ServingEngine:
             return admitted
         slots = free[:take].astype(np.int32)
         if cfg.family in KV_CACHE_FAMILIES:
-            lengths = np.asarray([len(p) for p in prompts[:take]], np.int32)
-            max_p = int(lengths.max())
-            toks = np.zeros((take, max_p), np.int32)
-            for i, p in enumerate(prompts[:take]):
-                toks[i, : len(p)] = p
-            s_pad = (
-                -(-max_p // sc.block_size) * sc.block_size
-                if sc.paged else sc.max_len
+            toks, lengths = pack_prompts(
+                prompts[:take],
+                pad_to=sc.block_size if sc.paged else None,
             )
+            s_pad = toks.shape[1] if sc.paged else sc.max_len
             logits, cache_n = self._prefill_ragged(
                 self.params, jnp.asarray(toks), jnp.asarray(lengths),
                 init_cache(cfg, take, s_pad),
@@ -202,15 +201,8 @@ class ServingEngine:
             else:
                 # One scatter splices all admitted slots into the engine
                 # cache (layer-stacked leaves carry the slot axis at
-                # position 1).
-                self.cache = jax.tree.map(
-                    lambda f, o: (
-                        f.at[:, slots].set(o)
-                        if hasattr(f, "ndim") and f.ndim > 1 else f
-                    ),
-                    self.cache,
-                    cache_n,
-                )
+                # position 1) — the shared admission-path scatter.
+                self.cache = splice_dense_slots(self.cache, slots, cache_n)
             first = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
         else:
             first = np.zeros(take, np.int32)

@@ -9,22 +9,86 @@ in-flight rollout slots in **one** policy-LM forward (the flat ``[B·W]``
 batch).  This is the WU-UCT analogue of continuous batching in
 :mod:`repro.serving.engine`: throughput comes from batching across requests,
 not from parallelizing one request harder.
+
+Two serving shapes:
+
+* :meth:`SearchService.search` / :meth:`~SearchService.decide` — one-shot:
+  admit a prompt batch, run it to completion, return.  Settled roots idle
+  until the slowest finishes.
+* :meth:`SearchService.submit` + :meth:`~SearchService.drain` (or
+  :meth:`~SearchService.serve` over a request stream) — continuous: a
+  persistent :class:`repro.core.batched_async_search.BatchedAsyncEngine`
+  keeps all ``B`` tree rows searching, and whenever a row settles the next
+  queued request is spliced into it mid-stream (tree reset, RNG lane, and
+  evaluator KV slot caches re-seeded through the shared
+  :mod:`repro.serving.admission` path).  :class:`ServeStats` reports the
+  occupancy this buys — the slot-idle fraction the one-shot path wastes.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
+import warnings
+from collections import deque
 from pathlib import Path
-from typing import Optional, Sequence
+from typing import Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import SearchSpec, build_searcher
+from ..core.api import as_search_config
 from ..core.evaluators import CachedModelEvaluator, Evaluator, ModelEvaluator
 from ..envs.token_env import TokenEnvState, make_token_env
 from ..models import forward
 from ..models.config import ModelConfig
+from .admission import pages_needed, validate_prompts
+
+#: Environment variable overriding where the committed benchmark baseline
+#: (``BENCH_model_eval.json``) is read from for the paged-pool default.
+BENCH_BASELINE_ENV = "REPRO_BENCH_BASELINE"
+
+_pool_fallback_warned = False
+
+
+class InvalidSearchActionError(RuntimeError):
+    """A search returned an action outside ``[0, top_k)``.
+
+    Actions are ranks into the policy's top-K table; an out-of-range value
+    (e.g. ``-1`` from a search that never visited the root's children) has
+    no token to map to.  Surfacing it beats the old behaviour of clipping
+    into range, which made a failed search indistinguishable from a
+    confident greedy top-1 pick.
+    """
+
+
+def _bench_baseline_path() -> Optional[Path]:
+    """Locate the committed ``BENCH_model_eval.json`` baseline.
+
+    Order: the :data:`BENCH_BASELINE_ENV` env var (points at the file), then
+    a walk up from this module's directory (the repo-checkout layout), then
+    a walk up from the current working directory (installed/site-packages
+    layouts running inside a checkout).  Returns ``None`` when nothing is
+    found.
+    """
+    env_path = os.environ.get(BENCH_BASELINE_ENV)
+    if env_path:
+        p = Path(env_path)
+        if p.is_file():
+            return p
+    seen = set()
+    for base in (Path(__file__).resolve().parent, Path.cwd().resolve()):
+        for parent in (base, *base.parents):
+            if parent in seen:
+                continue
+            seen.add(parent)
+            cand = parent / "BENCH_model_eval.json"
+            if cand.is_file():
+                return cand
+    return None
 
 
 def _prefix_sharing_pool_blocks(
@@ -38,24 +102,72 @@ def _prefix_sharing_pool_blocks(
     (``ceiling_ratio`` = dense positions / peak paged positions).  Size the
     pool to the dense bound shrunk by the WORST measured ratio, plus 25%
     headroom — shallow searches share the least, so the minimum ratio is the
-    conservative choice.  Any failure to read the benchmark file falls back
-    to the dense bound.
+    conservative choice.  When the baseline file cannot be found or parsed
+    (see :func:`_bench_baseline_path` for the lookup order), fall back to
+    the dense bound and warn once.
     """
+    global _pool_fallback_warned
     from ..models import num_pages
 
     dense = slots * num_pages(max_len, block_size)
-    try:
-        path = Path(__file__).resolve().parents[3] / "BENCH_model_eval.json"
-        rows = json.loads(path.read_text())["rows"]
-        ratio = min(
-            r["ceiling_ratio"] for r in rows if r["kind"] == "batch_ceiling"
-        )
-        if not ratio > 1.0:
+    path = _bench_baseline_path()
+    ratios = None
+    if path is not None:
+        try:
+            rows = json.loads(path.read_text())["rows"]
+            ratios = [
+                float(r["ceiling_ratio"])
+                for r in rows
+                if r.get("kind") == "batch_ceiling" and "ceiling_ratio" in r
+            ]
+        except (OSError, ValueError, KeyError, TypeError) as e:
+            warnings.warn(
+                f"could not parse benchmark baseline {path}: {e!r}; "
+                "using the dense paged-pool bound",
+                stacklevel=2,
+            )
             return dense
-        shrunk = int(dense / ratio * 1.25) + 1
-        return max(1, min(dense, shrunk))
-    except Exception:
+    if not ratios:
+        if not _pool_fallback_warned:
+            _pool_fallback_warned = True
+            warnings.warn(
+                "no BENCH_model_eval.json baseline with batch_ceiling rows "
+                f"found (set ${BENCH_BASELINE_ENV} to point at one); using "
+                "the dense paged-pool bound",
+                stacklevel=2,
+            )
         return dense
+    ratio = min(ratios)
+    if not ratio > 1.0:
+        return dense
+    shrunk = int(dense / ratio * 1.25) + 1
+    return max(1, min(dense, shrunk))
+
+
+@dataclasses.dataclass
+class ServeStats:
+    """Occupancy/admission counters for the continuous-serving path.
+
+    ``busy_tree_ticks`` counts (tree row, master tick) pairs where the row
+    was actively searching; ``ticks * batch`` is the capacity, so
+    :attr:`slot_idle_frac` is the fraction of row-ticks spent idle — the
+    quantity slot-level admission exists to minimize (a one-shot batch
+    wastes the whole tail where settled roots wait for the slowest).
+    """
+
+    batch: int = 0
+    submitted: int = 0
+    completed: int = 0
+    admissions: int = 0
+    ticks: int = 0
+    busy_tree_ticks: int = 0
+
+    @property
+    def slot_idle_frac(self) -> float:
+        cap = self.ticks * self.batch
+        if cap == 0:
+            return 0.0
+        return 1.0 - self.busy_tree_ticks / cap
 
 
 class SearchService:
@@ -70,6 +182,11 @@ class SearchService:
     uncached :class:`ModelEvaluator` otherwise — pass an explicit evaluator
     (e.g. a ``RolloutEvaluator`` over the token env) to switch evaluation
     modes without touching the engine.
+
+    ``ticks_per_round`` paces the continuous path: each :meth:`poll` runs at
+    most that many master ticks before the host harvests settled rows and
+    admits queued requests (smaller = settled rows idle less, more host
+    round-trips).
     """
 
     def __init__(
@@ -87,14 +204,21 @@ class SearchService:
         paged: bool = False,
         block_size: int = 16,
         num_blocks: Optional[int] = None,
+        ticks_per_round: int = 8,
     ):
         if spec.batch <= 0:
             raise ValueError("SearchService needs a batched spec (batch > 0)")
+        if ticks_per_round < 1:
+            raise ValueError(
+                f"ticks_per_round must be >= 1, got {ticks_per_round}"
+            )
         self.cfg = model_cfg
         self.params = params
         self.spec = spec
         self.top_k = top_k
         self.max_len = max_len
+        self.paged = paged
+        self.ticks_per_round = ticks_per_round
         # The env's prompt only seeds env.init, which the service bypasses
         # (roots are built from the request prompts directly).
         env = make_token_env(
@@ -143,30 +267,45 @@ class SearchService:
         self.evaluator = evaluator
         self._search = build_searcher(env, spec, evaluator=evaluator)
 
+        # --- continuous-serving state (built lazily on first submit) ------
+        self.stats = ServeStats(batch=spec.batch)
+        self._engine = None
+        self._carry = None
+        self._queue: deque = deque()       # (req_id, prompt, key)
+        self._results: dict = {}           # req_id -> per-request SearchResult
+        self._row_req: list = [None] * spec.batch
+        self._next_req_id = 0
+        self._base_key = jax.random.PRNGKey(0)
+
+    # ------------------------------------------------------------------
+    # Root-state packing
+    # ------------------------------------------------------------------
+    def _root_rows(self, prompts: Sequence[Sequence[int]]) -> TokenEnvState:
+        """Pack ``R`` prompts into an ``[R]``-leading root-state batch."""
+        validate_prompts(prompts, self.max_len)
+        r = len(prompts)
+        tokens = np.zeros((r, self.max_len), np.int32)
+        lengths = np.zeros((r,), np.int32)
+        for i, p in enumerate(prompts):
+            tokens[i, : len(p)] = p
+            lengths[i] = len(p)
+        return TokenEnvState(
+            tokens=jnp.asarray(tokens),
+            length=jnp.asarray(lengths),
+            done=jnp.zeros((r,), jnp.bool_),
+        )
+
     def _roots(self, prompts: Sequence[Sequence[int]]) -> TokenEnvState:
         B = self.spec.batch
         if not prompts:
             raise ValueError("need at least one prompt")
         if len(prompts) > B:
             raise ValueError(f"got {len(prompts)} prompts for batch={B}")
-        too_long = [i for i, p in enumerate(prompts) if len(p) >= self.max_len]
-        if too_long:
-            raise ValueError(
-                f"prompts {too_long} have length >= max_len={self.max_len}; "
-                "leave room for at least one generated token"
-            )
-        padded = list(prompts) + [prompts[0]] * (B - len(prompts))
-        tokens = jnp.zeros((B, self.max_len), jnp.int32)
-        lengths = []
-        for i, p in enumerate(padded):
-            tokens = tokens.at[i, : len(p)].set(jnp.asarray(p, jnp.int32))
-            lengths.append(len(p))
-        return TokenEnvState(
-            tokens=tokens,
-            length=jnp.asarray(lengths, jnp.int32),
-            done=jnp.zeros((B,), jnp.bool_),
-        )
+        return self._root_rows(list(prompts) + [prompts[0]] * (B - len(prompts)))
 
+    # ------------------------------------------------------------------
+    # One-shot serving
+    # ------------------------------------------------------------------
     def search(self, prompts: Sequence[Sequence[int]], key: jax.Array):
         """Run one batched search; returns the ``SearchResult`` (leading
         ``[B]``; rows past ``len(prompts)`` are padding)."""
@@ -177,15 +316,240 @@ class SearchService:
         """Search + decode: the searched next token for every prompt.
 
         Actions are ranks into the policy's top-K at each prompt's current
-        position; one batched forward maps them back to vocabulary ids.
+        position; one batched forward maps them back to vocabulary ids.  A
+        search that returns an out-of-range action (e.g. ``-1``) raises
+        :class:`InvalidSearchActionError` — clipping it into range would
+        silently serve the greedy top-1 token for a failed search.
         """
         n = len(prompts)
         roots = self._roots(prompts)
         res = self._search(roots, jax.random.split(key, self.spec.batch))
+        actions = np.asarray(res.action)
+        bad = [
+            (i, int(actions[i]))
+            for i in range(n)
+            if not 0 <= int(actions[i]) < self.top_k
+        ]
+        if bad:
+            raise InvalidSearchActionError(
+                f"search returned out-of-range action(s) {bad}; actions are "
+                f"ranks into the policy top-{self.top_k} table (the search "
+                "may not have completed any simulation from these roots)"
+            )
         logits, _ = forward(self.params, self.cfg, {"tokens": roots.tokens})
         pos = jnp.maximum(roots.length - 1, 0)
         at_pos = jnp.take_along_axis(logits, pos[:, None, None], axis=1)[:, 0]
         _, top_idx = jax.lax.top_k(at_pos, self.top_k)
+        # Clip only for the gather: rows >= n are padding (never validated,
+        # never returned); rows < n were validated in range above.
         ranks = jnp.clip(res.action, 0, self.top_k - 1)
         tokens = jnp.take_along_axis(top_idx, ranks[:, None], axis=1)[:, 0]
         return [int(t) for t in tokens[:n]], res
+
+    # ------------------------------------------------------------------
+    # Continuous serving: persistent engine + slot-level admission
+    # ------------------------------------------------------------------
+    def _ensure_engine(self):
+        if self._engine is not None:
+            return
+        if self.spec.engine != "async":
+            raise ValueError(
+                "continuous serving (submit/poll/drain/serve) needs an "
+                f"async-engine spec, got engine={self.spec.engine!r}"
+            )
+        from ..core.batched_async_search import BatchedAsyncEngine
+
+        B = self.spec.batch
+        engine = BatchedAsyncEngine(
+            self.env, as_search_config(self.spec), B,
+            evaluator=self.evaluator, use_kernel=self.spec.use_kernel,
+        )
+        # All rows born idle around a placeholder root; evict immediately so
+        # paged placeholders hold no pool pages while waiting for requests.
+        roots = self._root_rows([[0]] * B)
+        carry = engine.init_carry(
+            roots, jax.random.split(jax.random.PRNGKey(0), B),
+            active=jnp.zeros((B,), bool),
+        )
+        carry = engine.evict(carry, jnp.arange(B, dtype=jnp.int32))
+        self._engine = engine
+        self._carry = carry
+        self._segment = jax.jit(
+            lambda c: engine.run_segment(c, self.ticks_per_round)
+        )
+        self._result_fn = jax.jit(engine.result)
+        # The service always admits/evicts ONE row per call: `rows` keeps a
+        # fixed [1] shape, so these trace exactly once — a variable-size
+        # admission batch would recompile the whole splice (prefill included)
+        # for every distinct batch size it ever saw.
+        self._admit_fn = jax.jit(engine.admit)
+        self._evict_fn = jax.jit(engine.evict)
+
+    def _free_pool_blocks(self) -> Optional[int]:
+        """Free blocks in the paged evaluator's pool (None when dense)."""
+        if not self.paged:
+            return None
+        aux = self._carry[7]
+        return int(self.evaluator.num_blocks - jnp.sum(aux["refcount"] > 0))
+
+    def submit(self, prompt: Sequence[int], key: Optional[jax.Array] = None):
+        """Queue one search request; returns its request id.
+
+        ``key`` seeds the request's tree row (defaults to a fold of the
+        service key and the request id).  The request runs when a row
+        settles — call :meth:`poll` to make progress or :meth:`drain` to
+        block until everything queued has finished.
+        """
+        validate_prompts([prompt], self.max_len)
+        req_id = self._next_req_id
+        self._next_req_id += 1
+        if key is None:
+            key = jax.random.fold_in(self._base_key, req_id)
+        self._queue.append((req_id, list(prompt), key))
+        self.stats.submitted += 1
+        return req_id
+
+    def _settled(self) -> np.ndarray:
+        """Host copy of the per-row settled mask (ONE device sync)."""
+        return np.asarray(self._engine.settled(self._carry))
+
+    def _harvest(self, settled: Optional[np.ndarray] = None) -> dict:
+        """Collect results from settled occupied rows; free the rows."""
+        carry = self._carry
+        if settled is None:
+            settled = self._settled()
+        done_rows = [
+            b for b in range(self.spec.batch)
+            if settled[b] and self._row_req[b] is not None
+        ]
+        fresh = {}
+        if done_rows:
+            # One device->host transfer for the whole batch; per-request
+            # rows are host-side slices.
+            res = jax.tree.map(np.asarray, self._result_fn(carry))
+            for b in done_rows:
+                req_id = self._row_req[b]
+                row = jax.tree.map(lambda x: x[b], res)
+                self._results[req_id] = row
+                fresh[req_id] = row
+                self._row_req[b] = None
+                self.stats.completed += 1
+            # Return the rows' pages to the pool before anything new is
+            # admitted (a no-op for dense caches).  One row per call keeps
+            # the jitted evict at a single compiled shape.
+            for b in done_rows:
+                self._carry = self._evict_fn(
+                    self._carry, jnp.asarray([b], jnp.int32)
+                )
+        return fresh
+
+    def _admit_queued(self, settled: Optional[np.ndarray] = None) -> int:
+        """Splice queued requests into free rows (paged: admit-fewer)."""
+        if settled is None:
+            settled = self._settled()
+        free_rows = [
+            b for b in range(self.spec.batch)
+            if settled[b] and self._row_req[b] is None
+        ]
+        if not free_rows or not self._queue:
+            return 0
+        budget = self._free_pool_blocks()
+        admitted = 0
+        for b in free_rows:
+            if not self._queue:
+                break
+            req_id, prompt, key = self._queue[0]
+            if budget is not None:
+                need = pages_needed(len(prompt), self.evaluator.block_size)
+                if need > budget:
+                    break  # wait for pages to free (admit in order)
+                budget -= need
+            self._queue.popleft()
+            if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+                key = jax.random.key_data(key)
+            self._carry = self._admit_fn(
+                self._carry, jnp.asarray([b], jnp.int32),
+                self._root_rows([prompt]), key[None],
+            )
+            self._row_req[b] = req_id
+            admitted += 1
+        if admitted and self.paged:
+            # admit ran jitted, so pool exhaustion latched instead of
+            # raising; surface it here at the eager boundary.
+            self.evaluator.check_exhausted(self._carry[7])
+        self.stats.admissions += admitted
+        return admitted
+
+    def poll(self) -> dict:
+        """One serving round: harvest settled rows, admit queued requests,
+        advance the engine up to ``ticks_per_round`` master ticks.
+
+        Returns the requests that finished this round
+        (``{req_id: SearchResult row}``); results also accumulate in
+        :attr:`results`.
+        """
+        self._ensure_engine()
+        settled = self._settled()
+        fresh = self._harvest(settled)
+        # Harvest freed rows but left them settled; the same host mask
+        # serves admission (one device sync per round, not three).
+        self._admit_queued(settled)
+        if any(r is not None for r in self._row_req):
+            self._carry, t, busy = self._segment(self._carry)
+            self.stats.ticks += int(t)
+            self.stats.busy_tree_ticks += int(busy)
+        return fresh
+
+    def drain(self, max_rounds: int = 100_000) -> dict:
+        """Poll until every submitted request has a result; return them all.
+
+        ``max_rounds`` bounds the loop against a wedged engine (e.g. a
+        paged pool too small for even one queued prompt)."""
+        self._ensure_engine()
+        for _ in range(max_rounds):
+            if not self._queue and all(r is None for r in self._row_req):
+                break
+            before = (len(self._queue), sum(
+                r is not None for r in self._row_req
+            ), self.stats.ticks)
+            self.poll()
+            after = (len(self._queue), sum(
+                r is not None for r in self._row_req
+            ), self.stats.ticks)
+            if after == before:
+                raise RuntimeError(
+                    f"serving made no progress (queue={after[0]}, "
+                    f"in flight={after[1]}); paged pool too small for the "
+                    "queued prompts?"
+                )
+        else:
+            raise RuntimeError(f"drain exceeded {max_rounds} rounds")
+        # One last harvest: the final segment may have settled rows.
+        self._harvest()
+        return dict(self._results)
+
+    def serve(
+        self,
+        prompt_stream: Iterable[Sequence[int]],
+        keys: Optional[Sequence[jax.Array]] = None,
+    ) -> list:
+        """Serve a (possibly ragged) request stream to completion.
+
+        Each prompt is submitted and a :meth:`poll` round runs between
+        arrivals — requests admit into rows as earlier searches settle, so
+        arrival order interleaves with completion order exactly like real
+        traffic.  Returns per-request ``SearchResult`` rows in submission
+        order.
+        """
+        ids = []
+        for i, prompt in enumerate(prompt_stream):
+            key = keys[i] if keys is not None else None
+            ids.append(self.submit(prompt, key=key))
+            self.poll()
+        results = self.drain()
+        return [results[i] for i in ids]
+
+    @property
+    def results(self) -> dict:
+        """All completed requests so far (``{req_id: SearchResult row}``)."""
+        return dict(self._results)
