@@ -81,15 +81,32 @@ def check(baseline: dict, fresh: dict) -> list[str]:
     return errors
 
 
+def _load(path: str, role: str) -> dict:
+    """Read one report, failing with a pointed message instead of a
+    traceback — a missing/corrupt baseline is a usage error, not a crash
+    (and never a silently-passing check)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except OSError as e:
+        print(f"cannot read {role} report {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    except json.JSONDecodeError as e:
+        print(f"{role} report {path} is not valid JSON: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(data.get("rows"), list):
+        print(f"{role} report {path} has no 'rows' list", file=sys.stderr)
+        sys.exit(2)
+    return data
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", required=True)
     ap.add_argument("--fresh", required=True)
     args = ap.parse_args()
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
+    baseline = _load(args.baseline, "baseline")
+    fresh = _load(args.fresh, "fresh")
     errors = check(baseline, fresh)
     for e in errors:
         print(f"SCHEMA DRIFT: {e}", file=sys.stderr)

@@ -21,6 +21,19 @@ import argparse
 import json
 import sys
 import time
+import warnings
+
+# The failure modes one bench module can legitimately hit while the rest of
+# the sweep should still run: bad shapes/params (ValueError/TypeError),
+# compile/XLA errors (RuntimeError), missing record fields (KeyError/
+# AttributeError/IndexError), overflow (ArithmeticError), optional deps
+# (ImportError) and artifact IO (OSError).  A KeyboardInterrupt or a
+# typo-level NameError still aborts the whole run — see JX004 in
+# ``python -m repro.analysis.lint --rules``.
+_BENCH_ERRORS = (
+    RuntimeError, ValueError, TypeError, KeyError, AttributeError,
+    IndexError, ArithmeticError, ImportError, NotImplementedError, OSError,
+)
 
 
 def main() -> None:
@@ -100,9 +113,16 @@ def main() -> None:
         try:
             for line in modules[name]():
                 print(line, flush=True)
-        except Exception as e:  # noqa: BLE001
+        except _BENCH_ERRORS as e:
             ok = False
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            # warnings dedups identical messages, so a module that fails
+            # the same way in a loop of invocations warns once per process.
+            warnings.warn(
+                f"benchmark module {name!r} failed "
+                f"({type(e).__name__}: {e}); its rows are omitted",
+                stacklevel=2,
+            )
         print(f"# {name} took {time.time() - t0:.1f}s", file=sys.stderr)
         # Only a COMPLETE run may become the committed perf baseline — a
         # partial sweep would silently read as a full one in future diffs.

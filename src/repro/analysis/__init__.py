@@ -1,0 +1,51 @@
+"""Correctness tooling for the repo's *performance-correctness* bug classes.
+
+Two layers (see README "Static analysis & sanitizers"):
+
+* :mod:`repro.analysis.lint` — ``reprolint``, an AST static-analysis pass
+  whose rule catalog (JX001..JX005, :mod:`repro.analysis.rules`) mechanizes
+  the regressions that have already bitten this repo: per-shape retraces of
+  jitted entry points, host syncs / per-iteration dispatch in engine tick
+  paths, RNG key reuse, swallowed exceptions and silent clipping, and the
+  kernel ref-oracle contract.  Run ``python -m repro.analysis.lint src
+  tests`` (or the ``repro-lint`` console script).
+* :mod:`repro.analysis.retrace_guard` — a runtime sanitizer: a context
+  manager that counts jit cache misses per wrapped function, so tests can
+  pin ``traces == 1`` on hot paths (the serving admit/evict/segment graphs)
+  instead of discovering a 30x recompile regression in a benchmark.
+
+This package deliberately imports no JAX at lint time — the static pass is
+pure stdlib (``ast``) and safe to run in a bare CI step.
+"""
+
+from .engine import (  # noqa: F401
+    Baseline,
+    Finding,
+    Rule,
+    collect_files,
+    diff_baseline,
+    lint_paths,
+    lint_source,
+    rule_catalog,
+)
+from .retrace_guard import (  # noqa: F401
+    RetraceError,
+    RetraceGuard,
+    jit_cache_size,
+    retrace_guard,
+)
+
+__all__ = [
+    "Baseline",
+    "Finding",
+    "Rule",
+    "RetraceError",
+    "RetraceGuard",
+    "collect_files",
+    "diff_baseline",
+    "jit_cache_size",
+    "lint_paths",
+    "lint_source",
+    "retrace_guard",
+    "rule_catalog",
+]

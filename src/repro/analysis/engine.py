@@ -1,0 +1,244 @@
+"""``reprolint`` engine: rule registry, suppressions, baseline, file runner.
+
+The engine is deliberately small and stdlib-only.  Rules live in
+:mod:`repro.analysis.rules`; each one is an :class:`Rule` subclass
+registered with :func:`register`.  Two rule shapes exist:
+
+* **module rules** implement :meth:`Rule.check_module` and are run once per
+  scanned ``.py`` file with the parsed AST;
+* **project rules** implement :meth:`Rule.check_project` and are run once
+  over the whole scanned file set (e.g. the kernel ref-oracle contract,
+  which relates ``src/repro/kernels/<name>/`` packages to ``tests/``).
+
+Findings can be silenced two ways, both intentionally noisy in review:
+
+* an inline ``# reprolint: disable=JX002`` comment on the finding's line
+  (or on a comment-only line directly above it) — for deliberate patterns,
+  next to a justification;
+* a committed **baseline** file (``reprolint_baseline.json``) holding
+  grandfathered findings, each with a ``justification`` string.  The CLI
+  fails on any *diff* against the baseline: new findings must be fixed or
+  baselined, and stale entries (the finding no longer fires) must be
+  removed so the baseline only ever shrinks deliberately.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: Inline suppression directive: ``# reprolint: disable=JX001,JX004``.
+_SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9_,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline identity: line numbers drift, (rule, path, message)
+        is stable across unrelated edits to the same file."""
+        return (self.rule, self.path, self.message)
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Rule:
+    """Base class for lint rules.  Subclasses set ``id``/``title``/``regression``
+    and implement one of the ``check_*`` hooks."""
+
+    id: str = "JX000"
+    title: str = ""
+    #: The historical regression this rule encodes (shown by ``--rules``).
+    regression: str = ""
+
+    def check_module(
+        self, tree: ast.Module, src: str, path: str
+    ) -> Iterable[Finding]:
+        return ()
+
+    def check_project(
+        self, files: Dict[str, str], trees: Dict[str, ast.Module]
+    ) -> Iterable[Finding]:
+        return ()
+
+
+_REGISTRY: List[Rule] = []
+
+
+def register(cls):
+    """Class decorator adding a rule to the global registry."""
+    _REGISTRY.append(cls())
+    return cls
+
+
+def all_rules() -> List[Rule]:
+    from . import rules as _rules  # noqa: F401  (registers on import)
+
+    return list(_REGISTRY)
+
+
+def rule_catalog() -> List[Tuple[str, str, str]]:
+    """(id, title, regression) rows, for ``--rules`` and the README table."""
+    return [(r.id, r.title, r.regression) for r in all_rules()]
+
+
+# ---------------------------------------------------------------------------
+# Suppressions
+# ---------------------------------------------------------------------------
+def suppressed_lines(src: str) -> Dict[int, set]:
+    """Map line number -> set of rule ids suppressed on that line.
+
+    A directive on a comment-only line also covers the next line, so a
+    justification comment can sit above the flagged statement::
+
+        # Deliberate: one row per call keeps the jitted evict at one shape.
+        # reprolint: disable=JX002
+        self._carry = self._evict_fn(self._carry, row)
+    """
+    out: Dict[int, set] = {}
+    for i, text in enumerate(src.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        ids = {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+        out.setdefault(i, set()).update(ids)
+        if text.lstrip().startswith("#"):
+            out.setdefault(i + 1, set()).update(ids)
+    return out
+
+
+def _apply_suppressions(
+    findings: Iterable[Finding], src: str
+) -> List[Finding]:
+    sup = suppressed_lines(src)
+    return [f for f in findings if f.rule not in sup.get(f.line, ())]
+
+
+# ---------------------------------------------------------------------------
+# Runners
+# ---------------------------------------------------------------------------
+def lint_source(
+    src: str, path: str = "<string>", rules: Optional[Sequence[Rule]] = None
+) -> List[Finding]:
+    """Run the module rules over one source string (the test fixture entry
+    point — ``path`` feeds the rules' path-scoped heuristics)."""
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [
+            Finding("JX000", path, e.lineno or 0, e.offset or 0,
+                    f"syntax error: {e.msg}")
+        ]
+    findings: List[Finding] = []
+    for rule in rules if rules is not None else all_rules():
+        findings.extend(rule.check_module(tree, src, path))
+    findings = _apply_suppressions(findings, src)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def collect_files(paths: Sequence[str], root: str = ".") -> Dict[str, str]:
+    """Gather ``.py`` sources under ``paths`` as {root-relative path: text}."""
+    files: Dict[str, str] = {}
+    for p in paths:
+        full = os.path.join(root, p)
+        if os.path.isfile(full):
+            cands = [full]
+        else:
+            cands = [
+                os.path.join(dirpath, name)
+                for dirpath, dirnames, names in os.walk(full)
+                for name in sorted(names)
+                if name.endswith(".py")
+                and "__pycache__" not in dirpath.split(os.sep)
+            ]
+        for c in sorted(cands):
+            rel = os.path.relpath(c, root).replace(os.sep, "/")
+            with open(c, encoding="utf-8") as f:
+                files[rel] = f.read()
+    return files
+
+
+def lint_paths(
+    paths: Sequence[str],
+    root: str = ".",
+    rules: Optional[Sequence[Rule]] = None,
+) -> List[Finding]:
+    """Run all rules (module + project) over the scanned paths."""
+    active = list(rules) if rules is not None else all_rules()
+    files = collect_files(paths, root)
+    trees: Dict[str, ast.Module] = {}
+    findings: List[Finding] = []
+    for path, src in files.items():
+        mod_findings = lint_source(src, path, rules=active)
+        findings.extend(mod_findings)
+        try:
+            trees[path] = ast.parse(src)
+        except SyntaxError:
+            pass  # already reported as JX000 by lint_source
+    for rule in active:
+        findings.extend(rule.check_project(files, trees))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Baseline:
+    """Committed grandfathered findings, each carrying a justification."""
+
+    entries: List[dict] = dataclasses.field(default_factory=list)
+
+    @classmethod
+    def load(cls, path: str) -> "Baseline":
+        with open(path, encoding="utf-8") as f:
+            data = json.load(f)
+        entries = data.get("findings", [])
+        for e in entries:
+            missing = {"rule", "path", "message", "justification"} - set(e)
+            if missing:
+                raise ValueError(
+                    f"baseline entry {e!r} is missing {sorted(missing)} — "
+                    "every grandfathered finding must say why it is allowed"
+                )
+        return cls(entries)
+
+    def keys(self) -> List[Tuple[str, str, str]]:
+        return [(e["rule"], e["path"], e["message"]) for e in self.entries]
+
+
+def diff_baseline(
+    findings: Sequence[Finding], baseline: Baseline
+) -> Tuple[List[Finding], List[dict]]:
+    """Multiset diff of fresh findings vs the baseline.
+
+    Returns ``(new, stale)``: findings not covered by a baseline entry, and
+    baseline entries whose finding no longer fires (remove them — a baseline
+    only shrinks deliberately, so fixed findings cannot silently return).
+    """
+    remaining = list(baseline.entries)
+    new: List[Finding] = []
+    for f in findings:
+        for i, e in enumerate(remaining):
+            if (e["rule"], e["path"], e["message"]) == f.key:
+                del remaining[i]
+                break
+        else:
+            new.append(f)
+    return new, remaining

@@ -1,0 +1,94 @@
+"""``reprolint`` CLI: ``python -m repro.analysis.lint src tests``.
+
+Exit codes: 0 clean (or every finding matches the committed baseline),
+1 on any diff vs the baseline (new findings OR stale baseline entries),
+2 on usage errors.  ``--json`` emits machine-readable findings;
+``--rules`` prints the catalog with the historical regression each rule
+encodes.  The default baseline is ``reprolint_baseline.json`` in the
+current directory when it exists (CI runs from the repo root).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from .engine import Baseline, diff_baseline, lint_paths, rule_catalog
+
+DEFAULT_BASELINE = "reprolint_baseline.json"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="JAX-aware static analysis for this repo's historical "
+        "bug classes (JX001..JX005)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to scan (default: src tests)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline JSON (default: {DEFAULT_BASELINE} "
+                    "if present)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignore any baseline")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for rid, title, regression in rule_catalog():
+            print(f"{rid}  {title}\n       encodes: {regression}")
+        return 0
+
+    paths = args.paths or ["src", "tests"]
+    for p in paths:
+        if not os.path.exists(p):
+            print(f"repro-lint: path not found: {p}", file=sys.stderr)
+            return 2
+    findings = lint_paths(paths)
+
+    baseline = Baseline()
+    baseline_path = args.baseline
+    if not args.no_baseline:
+        if baseline_path is None and os.path.isfile(DEFAULT_BASELINE):
+            baseline_path = DEFAULT_BASELINE
+        if baseline_path is not None:
+            try:
+                baseline = Baseline.load(baseline_path)
+            except (OSError, json.JSONDecodeError, ValueError) as e:
+                print(f"repro-lint: bad baseline {baseline_path}: {e}",
+                      file=sys.stderr)
+                return 2
+    new, stale = diff_baseline(findings, baseline)
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "new": [f.to_json() for f in new],
+            "stale_baseline": stale,
+        }, indent=2))
+    else:
+        for f in new:
+            print(f.format())
+        for e in stale:
+            print(
+                f"STALE BASELINE: {e['rule']} @ {e['path']} no longer "
+                f"fires ({e['message'][:60]}...) — remove the entry",
+                file=sys.stderr,
+            )
+        grandfathered = len(findings) - len(new)
+        summary = (
+            f"repro-lint: {len(findings)} finding(s), {len(new)} new, "
+            f"{grandfathered} baselined, {len(stale)} stale baseline "
+            f"entr(y/ies) over {len(paths)} path(s)"
+        )
+        print(summary, file=sys.stderr)
+    return 1 if (new or stale) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,91 @@
+"""Runtime retrace sanitizer: pin ``traces == 1`` on jitted hot paths.
+
+Static analysis (JX001) catches the *shape* of retrace hazards; this module
+catches the fact.  A :class:`RetraceGuard` snapshots each wrapped jitted
+function's compilation-cache size on entry and diffs it on exit: every
+cache miss inside the guarded region is a (re)trace.  Tests wrap the
+serving hot path's graphs — ``admit`` / ``evict`` / ``run_segment`` — and
+assert each traced exactly once across a ragged-arrival drain, turning
+PR 8's 30x variable-shape-admit regression into a permanently red test
+instead of a benchmark archaeology exercise.
+
+Usage::
+
+    with retrace_guard(admit=svc._admit_fn, evict=svc._evict_fn) as g:
+        svc.serve(prompts)           # raises RetraceError if any fn
+    assert g.counts()["admit"] == 1  # traced more than max_traces times
+
+The guard needs ``jax.jit``-wrapped callables (anything exposing JAX's
+``_cache_size``); it imports no JAX itself and adds zero overhead to the
+guarded calls — it only reads cache sizes at the region boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+
+class RetraceError(AssertionError):
+    """A guarded jitted function retraced more than ``max_traces`` times."""
+
+
+def jit_cache_size(fn: Any) -> int:
+    """Compiled-signature count of a ``jax.jit``-wrapped callable."""
+    try:
+        return int(fn._cache_size())
+    except AttributeError:
+        raise TypeError(
+            f"{fn!r} is not a jax.jit-wrapped callable (no _cache_size): "
+            "retrace_guard can only watch jitted functions"
+        ) from None
+
+
+class RetraceGuard:
+    """Context manager counting jit cache misses per wrapped function."""
+
+    def __init__(self, fns: Dict[str, Any], max_traces: int = 1):
+        if not fns:
+            raise ValueError("retrace_guard needs at least one function")
+        for name, fn in fns.items():
+            jit_cache_size(fn)  # fail fast on non-jitted callables
+        self._fns = dict(fns)
+        self.max_traces = max_traces
+        self._base: Optional[Dict[str, int]] = None
+
+    def __enter__(self) -> "RetraceGuard":
+        self._base = {n: jit_cache_size(f) for n, f in self._fns.items()}
+        return self
+
+    def counts(self) -> Dict[str, int]:
+        """Traces per function since the guard was entered."""
+        if self._base is None:
+            raise RuntimeError("retrace_guard not entered yet")
+        return {
+            n: jit_cache_size(f) - self._base[n]
+            for n, f in self._fns.items()
+        }
+
+    def check(self) -> None:
+        """Raise :class:`RetraceError` if any function over-traced."""
+        offenders = {
+            n: c for n, c in self.counts().items() if c > self.max_traces
+        }
+        if offenders:
+            detail = ", ".join(
+                f"{n}: {c} traces" for n, c in sorted(offenders.items())
+            )
+            raise RetraceError(
+                f"retraced beyond max_traces={self.max_traces} inside the "
+                f"guarded region ({detail}) — an argument's shape/dtype is "
+                "varying per call; pad to a fixed shape or mark it static"
+            )
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # Don't mask an exception already unwinding through the region.
+        if exc_type is None:
+            self.check()
+
+
+def retrace_guard(max_traces: int = 1, **fns: Any) -> RetraceGuard:
+    """Build a :class:`RetraceGuard` over ``name=jitted_fn`` pairs."""
+    return RetraceGuard(fns, max_traces=max_traces)

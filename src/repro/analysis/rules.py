@@ -1,0 +1,648 @@
+"""The ``reprolint`` rule catalog: JX001..JX005.
+
+Every rule mechanizes a bug class that has already cost this repo a
+regression (see README "Static analysis & sanitizers" for the table):
+
+* **JX001 retrace hazard** — Python-varying shapes (``len()``-derived
+  sizes, comprehension/``list()``-built sequences) passed into jitted
+  entry points.  PR 8's variable-shape batched admit recompiled the whole
+  prefill graph per distinct row count: a 30x timed-drain regression that
+  no functional test could see.
+* **JX002 host sync / dispatch in hot loops** — ``.item()`` / ``float()``
+  / ``np.*`` concretization inside traced scopes, and per-iteration
+  ``jnp.*``/jitted-call dispatch inside Python loops of engine/serving
+  tick paths.  PR 7's ungated per-slot paged bookkeeping cost 4x at
+  d64_B4 before it was hoisted behind ``lax.cond``.
+* **JX003 RNG discipline** — a ``jax.random`` sampler reusing a key that
+  was not freshly derived (double consumption, loop-carried keys, a key
+  used both as sampler input and as a ``split``/``fold_in`` parent).
+  Correlated streams silently bias search statistics — the WU-UCT ``O_s``
+  accounting assumes independent rollouts.
+* **JX004 exception hygiene** — bare/over-broad ``except`` without
+  re-raise and silent clipping of user-facing action values.  PR 8 swept
+  these out of the serving layer (silent cache overflow, clipped invalid
+  actions, a bare ``except`` around the baseline lookup); this rule keeps
+  them out everywhere.
+* **JX005 kernel contract** — every ``kernels/<name>/`` package ships a
+  ``ref.py`` oracle and is named by a parity test under ``tests/``; the
+  Pallas kernels are only trustworthy relative to their jnp references.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .engine import Finding, Rule, register
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers
+# ---------------------------------------------------------------------------
+_JIT_NAMES = {"jax.jit", "jit", "jax.pjit", "pjit"}
+_PARTIAL_NAMES = {"partial", "functools.partial"}
+#: Transforms whose function argument is traced (its body runs under trace).
+_TRACING_CALLS = _JIT_NAMES | {
+    "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop",
+    "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.cond", "lax.cond",
+    "jax.lax.switch", "lax.switch",
+    "jax.lax.map", "lax.map",
+    "jax.lax.associative_scan", "lax.associative_scan",
+    "jax.vmap", "vmap", "jax.pmap", "pmap",
+    "jax.grad", "grad", "jax.value_and_grad", "value_and_grad",
+    "jax.checkpoint", "jax.remat",
+}
+
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jax.random.split' for nested Attribute/Name chains, else None."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = _dotted(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def _seg(src: str, node: ast.AST) -> str:
+    return ast.get_source_segment(src, node) or ""
+
+
+def _jit_wrapped_arg(call: ast.Call) -> Optional[ast.AST]:
+    """For ``jax.jit(fn, ...)`` return ``fn``; else None."""
+    if _dotted(call.func) in _JIT_NAMES and call.args:
+        return call.args[0]
+    return None
+
+
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    if _dotted(dec) in _JIT_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        d = _dotted(dec.func)
+        if d in _JIT_NAMES:
+            return True
+        if d in _PARTIAL_NAMES and dec.args:
+            return _dotted(dec.args[0]) in _JIT_NAMES
+    return False
+
+
+class ModuleInfo:
+    """One pre-pass shared by the rules: jitted entry points + traced defs."""
+
+    def __init__(self, tree: ast.Module):
+        self.jitted_names: Set[str] = set()
+        self.traced_defs: List[ast.AST] = []
+        defs_by_name: Dict[str, List[ast.AST]] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                defs_by_name.setdefault(node.name, []).append(node)
+        traced_names: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(_is_jit_decorator(d) for d in node.decorator_list):
+                    self.jitted_names.add(node.name)
+                    self.traced_defs.append(node)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)):
+                value = node.value
+                if not isinstance(value, ast.Call):
+                    continue
+                wrapped = _jit_wrapped_arg(value)
+                if wrapped is None:
+                    continue
+                targets = (
+                    node.targets if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for t in targets:
+                    d = _dotted(t)
+                    if d:
+                        self.jitted_names.add(d)
+                if isinstance(wrapped, ast.Lambda):
+                    self.traced_defs.append(wrapped)
+                elif isinstance(wrapped, ast.Name):
+                    traced_names.add(wrapped.id)
+            elif isinstance(node, ast.Call):
+                if _dotted(node.func) in _TRACING_CALLS:
+                    for arg in node.args:
+                        if isinstance(arg, ast.Lambda):
+                            self.traced_defs.append(arg)
+                        elif isinstance(arg, ast.Name):
+                            traced_names.add(arg.id)
+        for name in traced_names:
+            self.traced_defs.extend(defs_by_name.get(name, []))
+
+
+def _walk_same_scope(node: ast.AST) -> Iterable[ast.AST]:
+    """Walk a def body without descending into nested function scopes."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+# ---------------------------------------------------------------------------
+# JX001 — retrace hazard
+# ---------------------------------------------------------------------------
+@register
+class RetraceHazard(Rule):
+    id = "JX001"
+    title = "Python-varying shape passed to a jitted entry point"
+    regression = (
+        "PR 8: variable-shape batched admit recompiled the prefill graph "
+        "per distinct row count (30x timed-drain regression)"
+    )
+
+    def check_module(self, tree, src, path):
+        info = ModuleInfo(tree)
+        if not info.jitted_names:
+            return
+        for scope in [tree, *(
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        )]:
+            yield from self._check_scope(scope, info, src, path)
+
+    def _check_scope(self, scope, info, src, path):
+        varying: Set[str] = set()
+        empty_lists: Set[str] = set()
+        for node in _walk_same_scope(scope):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                t = node.targets[0]
+                if isinstance(t, ast.Name):
+                    if self._varying_expr(node.value, varying):
+                        varying.add(t.id)
+                    elif (isinstance(node.value, ast.List)
+                          and not node.value.elts):
+                        empty_lists.add(t.id)
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("append", "extend")
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in empty_lists):
+                varying.add(node.func.value.id)
+        for node in _walk_same_scope(scope):
+            if not isinstance(node, ast.Call):
+                continue
+            d = _dotted(node.func)
+            if d not in info.jitted_names:
+                continue
+            args = list(node.args) + [kw.value for kw in node.keywords]
+            for arg in args:
+                if self._varying_expr(arg, varying, deep=True):
+                    yield Finding(
+                        self.id, path, arg.lineno, arg.col_offset,
+                        f"jitted entry point '{d}' called with a "
+                        f"Python-varying shape ({_seg(src, arg)[:60]!r}): "
+                        "every distinct size retraces and recompiles the "
+                        "graph — pass a fixed-shape array (pad) or mark "
+                        "the argument static",
+                    )
+                    break
+
+    @staticmethod
+    def _varying_expr(expr: ast.AST, varying: Set[str],
+                      deep: bool = False) -> bool:
+        """Does ``expr`` produce / derive from a Python-varying size?"""
+        def is_varying_node(n):
+            if isinstance(n, (ast.ListComp, ast.SetComp, ast.GeneratorExp)):
+                return True
+            if isinstance(n, ast.Call):
+                d = _dotted(n.func)
+                if d in ("len", "list", "sorted"):
+                    return True
+            if isinstance(n, ast.Name) and n.id in varying:
+                return True
+            return False
+
+        if not deep:
+            return is_varying_node(expr)
+        return any(is_varying_node(n) for n in ast.walk(expr))
+
+
+# ---------------------------------------------------------------------------
+# JX002 — host sync / per-iteration dispatch in hot paths
+# ---------------------------------------------------------------------------
+_HOT_NAME_RE = re.compile(
+    r"(?:^|_)(tick|step|poll|segment|master|advance|harvest|admit|evict|"
+    r"drain|iter)"
+)
+_HOT_PATH_RE = re.compile(r"(^|/)(core|serving)/")
+#: Static-shape reads are not host syncs: int(x.shape[0]) is fine under jit.
+_STATIC_ARG_RE = re.compile(r"\.shape|\.ndim|\.size\b|\.dtype|len\(")
+
+
+@register
+class HostSyncInHotLoop(Rule):
+    id = "JX002"
+    title = "host sync in traced code / per-iteration dispatch in a hot loop"
+    regression = (
+        "PR 7: ungated per-slot paged bookkeeping dispatched every tick "
+        "(4x regression at d64_B4); host round-trips inside jit hide "
+        "implicit consts and device syncs"
+    )
+
+    def check_module(self, tree, src, path):
+        info = ModuleInfo(tree)
+        seen: Set[int] = set()
+        for fn in info.traced_defs:
+            for node in ast.walk(fn):
+                if id(node) in seen or not isinstance(node, ast.Call):
+                    continue
+                msg = self._host_sync(node, src)
+                if msg:
+                    seen.add(id(node))
+                    yield Finding(
+                        self.id, path, node.lineno, node.col_offset, msg
+                    )
+        if not _HOT_PATH_RE.search(path):
+            return
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _HOT_NAME_RE.search(fn.name):
+                continue
+            for loop in _walk_same_scope(fn):
+                if not isinstance(loop, (ast.For, ast.While)):
+                    continue
+                for node in ast.walk(loop):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    d = _dotted(node.func)
+                    if d is None:
+                        continue
+                    if (d.startswith(("jnp.", "jax.")) and d not in
+                            ("jax.random.PRNGKey", "jax.random.key")
+                            or d in info.jitted_names):
+                        yield Finding(
+                            self.id, path, node.lineno, node.col_offset,
+                            f"'{d}' dispatched inside a Python loop in hot "
+                            f"path '{fn.name}': each iteration pays a "
+                            "device dispatch (and a retrace if shapes "
+                            "vary) — batch the work into one call or move "
+                            "the loop into lax control flow",
+                        )
+                        break  # one finding per loop is enough
+
+    @staticmethod
+    def _host_sync(node: ast.Call, src: str) -> Optional[str]:
+        func = node.func
+        if (isinstance(func, ast.Attribute) and func.attr == "item"
+                and not node.args):
+            return (
+                ".item() inside traced code blocks on the device and "
+                "escapes the trace — keep the value on-device or compute "
+                "it outside jit"
+            )
+        d = _dotted(func)
+        if d and (d.startswith("np.") or d.startswith("numpy.")):
+            return (
+                f"'{d}' inside traced code forces a host round-trip per "
+                "call — use jnp inside jit, numpy only at eager boundaries"
+            )
+        if (isinstance(func, ast.Name) and func.id in ("float", "int", "bool")
+                and len(node.args) == 1
+                and not isinstance(node.args[0], ast.Constant)):
+            arg_src = _seg(src, node.args[0])
+            if not _STATIC_ARG_RE.search(arg_src):
+                return (
+                    f"{func.id}() on a traced value concretizes it "
+                    "(ConcretizationTypeError or silent host sync) — use "
+                    "jnp ops, or hoist the scalar out of the traced scope"
+                )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# JX003 — RNG key discipline
+# ---------------------------------------------------------------------------
+_KEY_PRODUCERS = {"PRNGKey", "key", "split", "fold_in", "clone",
+                  "wrap_key_data"}
+_KEY_DERIVERS = {"split", "fold_in"}
+_NON_CONSUMERS = _KEY_PRODUCERS | {"key_data", "key_impl", "unsafe_rbg_key"}
+
+
+@register
+class RngDiscipline(Rule):
+    id = "JX003"
+    title = "jax.random key reused instead of split/fold_in-derived"
+    regression = (
+        "correlated sampler streams bias parallel rollout statistics — "
+        "WU-UCT's O_s accounting assumes independent simulations"
+    )
+
+    def check_module(self, tree, src, path):
+        aliases = self._random_aliases(tree)
+        scopes = [tree] + [
+            n for n in ast.walk(tree)
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        ]
+        for scope in scopes:
+            yield from self._check_scope(scope, aliases, src, path)
+
+    @staticmethod
+    def _random_aliases(tree) -> Set[str]:
+        """Dotted prefixes that mean the jax.random module."""
+        out = {"jax.random"}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "jax.random" and a.asname:
+                        out.add(a.asname)
+            elif isinstance(node, ast.ImportFrom) and node.module == "jax":
+                for a in node.names:
+                    if a.name == "random":
+                        out.add(a.asname or "random")
+        return out
+
+    def _rand_fn(self, call: ast.Call, aliases: Set[str]) -> Optional[str]:
+        d = _dotted(call.func)
+        if d is None or "." not in d:
+            return None
+        prefix, leaf = d.rsplit(".", 1)
+        return leaf if prefix in aliases else None
+
+    def _check_scope(self, scope, aliases, src, path):
+        versions: Dict[str, int] = {}
+        is_key: Set[Tuple[str, int]] = set()
+        def_depth: Dict[Tuple[str, int], int] = {}
+        sampled: Dict[Tuple[str, int], List[ast.Call]] = {}
+        derived: Dict[Tuple[str, int], List[ast.Call]] = {}
+        findings: List[Finding] = []
+
+        def cur(name):
+            return (name, versions.get(name, 0))
+
+        def bind(name, key, depth):
+            versions[name] = versions.get(name, 0) + 1
+            if key:
+                is_key.add(cur(name))
+                def_depth[cur(name)] = depth
+
+        def key_producing(expr) -> bool:
+            if isinstance(expr, ast.Call):
+                leaf = self._rand_fn(expr, aliases)
+                if leaf in _KEY_PRODUCERS:
+                    return True
+            if isinstance(expr, ast.Name) and cur(expr.id) in is_key:
+                return True
+            if isinstance(expr, ast.Subscript):
+                return key_producing(expr.value)
+            return False
+
+        def visit_expr(expr, depth):
+            for node in ast.walk(expr):
+                if not isinstance(node, ast.Call):
+                    continue
+                leaf = self._rand_fn(node, aliases)
+                if leaf is None:
+                    continue
+                for arg in list(node.args) + [k.value for k in node.keywords]:
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    kv = cur(arg.id)
+                    if kv not in is_key:
+                        continue
+                    if leaf in _KEY_DERIVERS:
+                        derived.setdefault(kv, []).append(node)
+                    elif leaf not in _NON_CONSUMERS:
+                        uses = sampled.setdefault(kv, [])
+                        uses.append(node)
+                        if len(uses) == 2:
+                            findings.append(Finding(
+                                self.id, path, node.lineno, node.col_offset,
+                                f"key '{arg.id}' consumed by jax.random."
+                                f"{leaf} after already being consumed — "
+                                "derive fresh keys with split/fold_in",
+                            ))
+                        if depth > def_depth.get(kv, depth):
+                            findings.append(Finding(
+                                self.id, path, node.lineno, node.col_offset,
+                                f"key '{arg.id}' consumed by jax.random."
+                                f"{leaf} inside a loop but produced outside "
+                                "it — every iteration reuses the same key",
+                            ))
+
+        def bind_target(t, key, depth):
+            if isinstance(t, ast.Name):
+                bind(t.id, key, depth)
+            elif isinstance(t, (ast.Tuple, ast.List)):
+                for el in t.elts:
+                    bind_target(el, key, depth)
+
+        if isinstance(scope, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            params = (scope.args.posonlyargs + scope.args.args
+                      + scope.args.kwonlyargs)
+            for p in params:
+                if re.search(r"(^|_)(key|rng|prng)s?$", p.arg):
+                    bind(p.arg, True, 0)
+
+        def visit_stmts(stmts, depth):
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                    continue  # separate scope
+                if isinstance(st, ast.Assign):
+                    visit_expr(st.value, depth)
+                    key = key_producing(st.value)
+                    for t in st.targets:
+                        bind_target(t, key, depth)
+                elif isinstance(st, ast.AugAssign):
+                    visit_expr(st.value, depth)
+                elif isinstance(st, ast.AnnAssign) and st.value is not None:
+                    visit_expr(st.value, depth)
+                    bind_target(st.target, key_producing(st.value), depth)
+                elif isinstance(st, (ast.For, ast.AsyncFor)):
+                    visit_expr(st.iter, depth)
+                    iter_keys = any(
+                        isinstance(n, ast.Call)
+                        and (self._rand_fn(n, aliases) in ("split",))
+                        for n in ast.walk(st.iter)
+                    )
+                    bind_target(st.target, iter_keys, depth + 1)
+                    visit_stmts(st.body, depth + 1)
+                    visit_stmts(st.orelse, depth)
+                elif isinstance(st, ast.While):
+                    visit_expr(st.test, depth + 1)
+                    visit_stmts(st.body, depth + 1)
+                    visit_stmts(st.orelse, depth)
+                elif isinstance(st, ast.If):
+                    visit_expr(st.test, depth)
+                    visit_stmts(st.body, depth)
+                    visit_stmts(st.orelse, depth)
+                elif isinstance(st, (ast.With, ast.AsyncWith)):
+                    for item in st.items:
+                        visit_expr(item.context_expr, depth)
+                    visit_stmts(st.body, depth)
+                elif isinstance(st, ast.Try):
+                    visit_stmts(st.body, depth)
+                    for h in st.handlers:
+                        visit_stmts(h.body, depth)
+                    visit_stmts(st.orelse, depth)
+                    visit_stmts(st.finalbody, depth)
+                elif isinstance(st, (ast.Return, ast.Expr)):
+                    if st.value is not None:
+                        visit_expr(st.value, depth)
+                elif isinstance(st, ast.Raise):
+                    if st.exc is not None:
+                        visit_expr(st.exc, depth)
+
+        body = scope.body if hasattr(scope, "body") else []
+        visit_stmts(body, 0)
+        for kv, uses in sampled.items():
+            if kv in derived:
+                findings.append(Finding(
+                    self.id, path, uses[0].lineno, uses[0].col_offset,
+                    f"key '{kv[0]}' is consumed by a sampler AND used as a "
+                    "split/fold_in parent — the sampler stream is "
+                    "correlated with every derived key",
+                ))
+        yield from findings
+
+
+# ---------------------------------------------------------------------------
+# JX004 — exception hygiene / silent clipping
+# ---------------------------------------------------------------------------
+_BROAD_EXC = {"Exception", "BaseException"}
+_CLIP_FNS = {"jnp.clip", "jax.numpy.clip", "np.clip", "numpy.clip"}
+_USER_VALUE_RE = re.compile(r"action", re.IGNORECASE)
+
+
+@register
+class ExceptionHygiene(Rule):
+    id = "JX004"
+    title = "bare/over-broad except or silent clip of a user-facing value"
+    regression = (
+        "PR 8 serving sweep: silent cache overflow on over-long prompts, "
+        "invalid search actions clipped into confident-looking tokens, a "
+        "bare except hiding baseline-parse failures"
+    )
+
+    def check_module(self, tree, src, path):
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ExceptHandler):
+                yield from self._check_handler(node, src, path)
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            has_raise = any(
+                isinstance(n, ast.Raise) for n in _walk_same_scope(fn)
+            )
+            if has_raise:
+                continue
+            for node in _walk_same_scope(fn):
+                if isinstance(node, ast.Call):
+                    clipped = self._clipped_user_value(node, src)
+                    if clipped:
+                        yield Finding(
+                            self.id, path, node.lineno, node.col_offset,
+                            f"silent clip of user-facing value "
+                            f"{clipped!r} in '{fn.name}' — an out-of-range "
+                            "action becomes indistinguishable from a valid "
+                            "one; validate and raise at the eager boundary",
+                        )
+
+    def _check_handler(self, node: ast.ExceptHandler, src, path):
+        if node.type is None:
+            yield Finding(
+                self.id, path, node.lineno, node.col_offset,
+                "bare 'except:' swallows everything including "
+                "KeyboardInterrupt — catch a specific exception tuple",
+            )
+            return
+        names = []
+        types = node.type.elts if isinstance(node.type, ast.Tuple) \
+            else [node.type]
+        for t in types:
+            d = _dotted(t)
+            if d in _BROAD_EXC:
+                names.append(d)
+        if not names:
+            return
+        reraises = any(
+            isinstance(n, ast.Raise)
+            and (n.exc is None
+                 or (isinstance(n.exc, ast.Name) and n.exc.id == node.name))
+            for n in ast.walk(node)
+        )
+        if not reraises:
+            yield Finding(
+                self.id, path, node.lineno, node.col_offset,
+                f"over-broad 'except {'/'.join(names)}' without re-raise "
+                "hides real failures — catch the specific exception tuple "
+                "the guarded code can actually raise",
+            )
+
+    @staticmethod
+    def _clipped_user_value(node: ast.Call, src) -> Optional[str]:
+        d = _dotted(node.func)
+        target = None
+        if d in _CLIP_FNS and node.args:
+            target = node.args[0]
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "clip" and d is None):
+            target = node.func.value
+        elif (isinstance(node.func, ast.Attribute)
+              and node.func.attr == "clip" and d and d.count(".") >= 1
+              and d.split(".")[0] not in ("jnp", "np", "numpy", "jax")):
+            target = node.func.value
+        if target is None:
+            return None
+        seg = _seg(src, target)
+        return seg if _USER_VALUE_RE.search(seg) else None
+
+
+# ---------------------------------------------------------------------------
+# JX005 — kernel ref-oracle contract
+# ---------------------------------------------------------------------------
+_KERNEL_PKG_RE = re.compile(r"(^|/)kernels/([^/]+)/[^/]+\.py$")
+
+
+@register
+class KernelContract(Rule):
+    id = "JX005"
+    title = "kernel package missing its ref.py oracle or parity test"
+    regression = (
+        "a Pallas kernel is only trustworthy relative to its jnp "
+        "reference; every kernel family here landed with oracle parity "
+        "sweeps and later optimizations were caught against them"
+    )
+
+    def check_project(self, files, trees):
+        pkgs: Dict[str, List[str]] = {}
+        for path in files:
+            m = _KERNEL_PKG_RE.search(path)
+            if m:
+                pkgs.setdefault(m.group(2), []).append(path)
+        test_files = {
+            p: s for p, s in files.items()
+            if p.split("/")[0] == "tests" or "/tests/" in p
+            or p.rsplit("/", 1)[-1].startswith("test_")
+        }
+        for name, members in sorted(pkgs.items()):
+            non_init = [p for p in members
+                        if not p.endswith("__init__.py")]
+            if not non_init:
+                continue
+            anchor = sorted(non_init)[0]
+            if not any(p.endswith(f"kernels/{name}/ref.py")
+                       for p in members):
+                yield Finding(
+                    self.id, anchor, 1, 0,
+                    f"kernel package '{name}' ships no ref.py oracle — "
+                    "add the jnp reference implementation the Pallas "
+                    "kernel is tested against",
+                )
+            if test_files and not any(name in s for s in
+                                      test_files.values()):
+                yield Finding(
+                    self.id, anchor, 1, 0,
+                    f"kernel '{name}' is not named by any parity test "
+                    "under tests/ — add an oracle-parity test pinning the "
+                    "kernel to its ref.py",
+                )

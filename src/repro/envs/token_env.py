@@ -88,6 +88,11 @@ def make_token_env(
         action = jnp.asarray(action, jnp.int32)
         pol = _logits(policy_params, policy_cfg, state.tokens, state.length)
         _, top_idx = jax.lax.top_k(pol, top_k)
+        # step() runs inside jitted search waves, so an out-of-range rank
+        # cannot raise here; the clip is a gather guard, and the eager
+        # boundary (SearchService.decide) validates the searched action and
+        # raises InvalidSearchActionError before any clipped value is served.
+        # reprolint: disable=JX004
         token = top_idx[jnp.clip(action, 0, top_k - 1)]
 
         rew_logits = _logits(reward_params, reward_cfg, state.tokens, state.length)

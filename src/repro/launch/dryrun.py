@@ -30,6 +30,18 @@ import jax
 from repro.launch.cells import SHAPES, all_cells, build_cell, skip_reason
 from repro.launch.mesh import make_production_mesh, make_test_mesh
 
+# The failure modes a dry-run cell can legitimately hit: sharding/shape
+# mismatches (ValueError/TypeError), compile failures and XLA OOM
+# (RuntimeError — XlaRuntimeError subclasses it), missing cell config keys
+# (KeyError/AttributeError), unsupported collectives (NotImplementedError)
+# and artifact IO (OSError).  Anything else — e.g. a KeyboardInterrupt or a
+# typo-level NameError — should crash the sweep, not be recorded as a cell
+# failure.
+_CELL_ERRORS = (
+    RuntimeError, ValueError, TypeError, KeyError, AttributeError,
+    IndexError, NotImplementedError, OSError, ArithmeticError,
+)
+
 # TPU v5e hardware constants (assignment-specified).
 PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
 HBM_BW = 819e9            # bytes/s per chip
@@ -383,7 +395,7 @@ def main() -> None:
                     f"useful={r['useful_flops_ratio']:.2f}",
                     flush=True,
                 )
-            except Exception as e:  # noqa: BLE001 — record and continue
+            except _CELL_ERRORS as e:  # record the cell's failure, continue
                 traceback.print_exc()
                 rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
                        "error": str(e)}

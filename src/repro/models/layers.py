@@ -547,7 +547,9 @@ def moe_block(p, cfg, x):
     mesh = ambient_abstract_mesh()
     try:
         axes = dict(mesh.shape)
-    except Exception:
+    except (AttributeError, TypeError):
+        # No ambient mesh (None) or a mesh whose .shape isn't dict-able
+        # (older JAX AbstractMesh): fall back to the unsharded local path.
         axes = {}
     tp = axes.get("model", 1)
     if tp > 1 and cfg.num_experts % tp == 0:

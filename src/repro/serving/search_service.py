@@ -429,6 +429,9 @@ class SearchService:
             res = jax.tree.map(np.asarray, self._result_fn(carry))
             for b in done_rows:
                 req_id = self._row_req[b]
+                # Host-side slicing of an already-fetched numpy tree — no
+                # device dispatch despite the jax.tree.map spelling.
+                # reprolint: disable=JX002
                 row = jax.tree.map(lambda x: x[b], res)
                 self._results[req_id] = row
                 fresh[req_id] = row
@@ -438,6 +441,11 @@ class SearchService:
             # admitted (a no-op for dense caches).  One row per call keeps
             # the jitted evict at a single compiled shape.
             for b in done_rows:
+                # Deliberate per-row dispatch: a fixed [1]-shape rows vector
+                # keeps the jitted evict at ONE compiled signature (the
+                # variable-shape alternative was PR 8's 30x regression), and
+                # done_rows is bounded by the small host-side batch B.
+                # reprolint: disable=JX002
                 self._carry = self._evict_fn(
                     self._carry, jnp.asarray([b], jnp.int32)
                 )
@@ -465,6 +473,10 @@ class SearchService:
                     break  # wait for pages to free (admit in order)
                 budget -= need
             self._queue.popleft()
+            # Deliberate per-row admission dispatch (same reasoning as the
+            # evict loop in _harvest): fixed [1]-shape rows keep the jitted
+            # admit at one compiled signature; issubdtype is metadata-only.
+            # reprolint: disable=JX002
             if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
                 key = jax.random.key_data(key)
             self._carry = self._admit_fn(

@@ -1,0 +1,468 @@
+"""repro.analysis: the reprolint rule catalog + the retrace sanitizer.
+
+Tentpole coverage: each JX rule fires on a known-bad fixture snippet, stays
+silent on the repaired version, and honors inline suppression; the baseline
+machinery diffs strictly (new findings AND stale entries fail); the repo
+itself lints clean against the committed baseline.
+
+Runtime sanitizer coverage: :func:`repro.analysis.retrace_guard` counts jit
+cache misses, raises :class:`RetraceError` on variable-shape retraces, and
+— the load-bearing assertion — pins ``traces == 1`` on the continuous
+serving hot path's ``admit`` / ``evict`` / ``run_segment`` / ``result``
+graphs across a ragged-arrival drain, dense and paged (PR 8's 30x
+variable-shape-admit regression class, as a permanent red test).
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    RetraceError,
+    diff_baseline,
+    lint_paths,
+    lint_source,
+    retrace_guard,
+    rule_catalog,
+)
+from repro.analysis.lint import main as lint_main
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def rules_fired(src, path="src/repro/core/fake.py"):
+    return sorted({f.rule for f in lint_source(src, path)})
+
+
+# ---------------------------------------------------------------------------
+# JX001 — retrace hazard
+# ---------------------------------------------------------------------------
+JX001_BAD = """
+import jax, jax.numpy as jnp
+step = jax.jit(lambda x: x + 1)
+
+def admit(prompts):
+    rows = [p for p in prompts]
+    return step(jnp.asarray(rows))
+"""
+
+JX001_GOOD = """
+import jax, jax.numpy as jnp
+step = jax.jit(lambda x: x + 1)
+
+def admit_one(b):
+    return step(jnp.asarray([b], jnp.int32))
+"""
+
+
+def test_jx001_fires_on_varying_shape_call():
+    assert "JX001" in rules_fired(JX001_BAD)
+    # len()-derived sizes are the other historical shape of the bug.
+    assert "JX001" in rules_fired(
+        "import jax, jax.numpy as jnp\n"
+        "f = jax.jit(lambda x: x)\n"
+        "def g(xs):\n"
+        "    return f(jnp.zeros((len(xs), 4)))\n"
+    )
+
+
+def test_jx001_silent_on_fixed_shape_call():
+    assert "JX001" not in rules_fired(JX001_GOOD)
+
+
+def test_jx001_inline_suppression():
+    suppressed = JX001_BAD.replace(
+        "return step(jnp.asarray(rows))",
+        "return step(jnp.asarray(rows))  # reprolint: disable=JX001",
+    )
+    assert "JX001" not in rules_fired(suppressed)
+
+
+# ---------------------------------------------------------------------------
+# JX002 — host sync in traced code / dispatch in hot loops
+# ---------------------------------------------------------------------------
+JX002_TRACED_BAD = """
+import jax
+import numpy as np
+
+@jax.jit
+def tick(x):
+    return np.asarray(x).sum() + float(x)
+"""
+
+JX002_TRACED_GOOD = """
+import jax, jax.numpy as jnp
+
+@jax.jit
+def tick(x):
+    n = int(x.shape[0])  # static shape read, not a host sync
+    return jnp.sum(x) / n
+"""
+
+JX002_LOOP_BAD = """
+import jax.numpy as jnp
+
+def master_tick(xs):
+    out = []
+    for x in xs:
+        out.append(jnp.sum(x))
+    return out
+"""
+
+
+def test_jx002_fires_on_host_sync_in_traced_scope():
+    assert "JX002" in rules_fired(JX002_TRACED_BAD)
+    assert "JX002" in rules_fired(
+        "import jax\n@jax.jit\ndef f(x):\n    return x.item()\n"
+    )
+
+
+def test_jx002_silent_on_static_shape_reads():
+    assert "JX002" not in rules_fired(JX002_TRACED_GOOD)
+
+
+def test_jx002_fires_on_hot_loop_dispatch_in_core_paths_only():
+    assert "JX002" in rules_fired(JX002_LOOP_BAD)
+    # Same code outside core/serving, or in a non-hot-named function,
+    # is not a tick path and stays silent.
+    assert "JX002" not in rules_fired(
+        JX002_LOOP_BAD, path="src/repro/models/fake.py"
+    )
+    assert "JX002" not in rules_fired(
+        JX002_LOOP_BAD.replace("master_tick", "build_tables")
+    )
+
+
+def test_jx002_inline_suppression():
+    suppressed = JX002_LOOP_BAD.replace(
+        "        out.append(jnp.sum(x))",
+        "        # reprolint: disable=JX002\n        out.append(jnp.sum(x))",
+    )
+    assert "JX002" not in rules_fired(suppressed)
+
+
+# ---------------------------------------------------------------------------
+# JX003 — RNG key discipline
+# ---------------------------------------------------------------------------
+JX003_DOUBLE = """
+import jax
+
+def f(seed):
+    key = jax.random.PRNGKey(seed)
+    a = jax.random.normal(key, (3,))
+    b = jax.random.uniform(key, (3,))
+    return a, b
+"""
+
+JX003_LOOP = """
+import jax
+
+def g(key, n):
+    out = []
+    for i in range(n):
+        out.append(jax.random.normal(key, ()))
+    return out
+"""
+
+JX003_PARENT = """
+import jax
+
+def h(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, ())
+    k2 = jax.random.fold_in(key, 1)
+    return x, k2
+"""
+
+JX003_GOOD = """
+import jax
+
+def f(seed):
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (3,))
+    b = jax.random.uniform(kb, (3,))
+    return a, b
+
+def g(key, n):
+    return [
+        jax.random.normal(jax.random.fold_in(key, i), ()) for i in range(n)
+    ]
+"""
+
+
+def test_jx003_fires_on_double_consumption():
+    assert "JX003" in rules_fired(JX003_DOUBLE)
+
+
+def test_jx003_fires_on_loop_reuse_of_outer_key():
+    assert "JX003" in rules_fired(JX003_LOOP)
+
+
+def test_jx003_fires_on_sampler_plus_parent_use():
+    assert "JX003" in rules_fired(JX003_PARENT)
+
+
+def test_jx003_silent_on_split_and_fold_in_discipline():
+    assert "JX003" not in rules_fired(JX003_GOOD)
+
+
+def test_jx003_inline_suppression():
+    suppressed = JX003_DOUBLE.replace(
+        "    b = jax.random.uniform(key, (3,))",
+        "    b = jax.random.uniform(key, (3,))  # reprolint: disable=JX003",
+    )
+    assert "JX003" not in rules_fired(suppressed)
+
+
+# ---------------------------------------------------------------------------
+# JX004 — exception hygiene / silent clipping
+# ---------------------------------------------------------------------------
+def test_jx004_fires_on_bare_and_broad_except():
+    assert "JX004" in rules_fired(
+        "def f():\n    try:\n        g()\n    except:\n        pass\n"
+    )
+    assert "JX004" in rules_fired(
+        "def f():\n    try:\n        g()\n"
+        "    except Exception as e:\n        print(e)\n"
+    )
+
+
+def test_jx004_silent_on_specific_tuple_and_reraise():
+    assert "JX004" not in rules_fired(
+        "def f():\n    try:\n        g()\n"
+        "    except (OSError, ValueError):\n        pass\n"
+    )
+    assert "JX004" not in rules_fired(
+        "def f():\n    try:\n        g()\n"
+        "    except Exception:\n        cleanup()\n        raise\n"
+    )
+
+
+def test_jx004_fires_on_silent_action_clip():
+    bad = (
+        "import jax.numpy as jnp\n"
+        "def decide(action, k):\n"
+        "    return jnp.clip(action, 0, k - 1)\n"
+    )
+    assert "JX004" in rules_fired(bad)
+    # A validating function (it raises) may clip for padding rows.
+    good = bad.replace(
+        "    return jnp.clip(action, 0, k - 1)\n",
+        "    if action.min() < 0:\n"
+        "        raise ValueError('bad action')\n"
+        "    return jnp.clip(action, 0, k - 1)\n",
+    )
+    assert "JX004" not in rules_fired(good)
+    # Clipping non-user-facing values (kernel index clamps) is fine.
+    assert "JX004" not in rules_fired(
+        "import jax.numpy as jnp\n"
+        "def gather(table, p):\n"
+        "    return jnp.clip(table, 0, p - 1)\n"
+    )
+
+
+def test_jx004_inline_suppression_with_justification_comment():
+    bad = (
+        "import jax.numpy as jnp\n"
+        "def decide(action, k):\n"
+        "    # validated at the eager boundary\n"
+        "    # reprolint: disable=JX004\n"
+        "    return jnp.clip(action, 0, k - 1)\n"
+    )
+    assert "JX004" not in rules_fired(bad)
+
+
+# ---------------------------------------------------------------------------
+# JX005 — kernel ref-oracle contract (project rule, real file trees)
+# ---------------------------------------------------------------------------
+def _kernel_tree(tmp_path, *, ref=True, named=True):
+    pkg = tmp_path / "src" / "repro" / "kernels" / "fused_topk"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (pkg / "fused_topk.py").write_text("def fused_topk():\n    pass\n")
+    if ref:
+        (pkg / "ref.py").write_text("def topk_ref():\n    pass\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    body = "from x import fused_topk\n" if named else "import x\n"
+    (tests / "test_kernels.py").write_text(body)
+    return tmp_path
+
+
+def test_jx005_clean_when_ref_and_parity_test_exist(tmp_path):
+    root = _kernel_tree(tmp_path)
+    found = lint_paths(["src", "tests"], root=str(root))
+    assert not [f for f in found if f.rule == "JX005"]
+
+
+def test_jx005_fires_on_missing_ref(tmp_path):
+    root = _kernel_tree(tmp_path, ref=False)
+    found = [f for f in lint_paths(["src", "tests"], root=str(root))
+             if f.rule == "JX005"]
+    assert found and "ref.py" in found[0].message
+
+
+def test_jx005_fires_on_unnamed_kernel(tmp_path):
+    root = _kernel_tree(tmp_path, named=False)
+    found = [f for f in lint_paths(["src", "tests"], root=str(root))
+             if f.rule == "JX005"]
+    assert found and "parity test" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# Engine: baseline diff, CLI, repo-clean
+# ---------------------------------------------------------------------------
+def test_baseline_diff_strict(tmp_path):
+    findings = lint_source(JX001_BAD, "src/repro/core/fake.py")
+    assert findings
+    entry = {
+        "rule": findings[0].rule, "path": findings[0].path,
+        "message": findings[0].message, "justification": "grandfathered",
+    }
+    stale_entry = dict(entry, rule="JX004", message="gone")
+    new, stale = diff_baseline(findings, Baseline([entry, stale_entry]))
+    assert not [f for f in new if f.key == findings[0].key]
+    assert stale == [stale_entry]
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"findings": [
+        {"rule": "JX001", "path": "x.py", "message": "m"}
+    ]}))
+    with pytest.raises(ValueError, match="justification"):
+        Baseline.load(str(p))
+
+
+def test_cli_exit_codes(tmp_path, monkeypatch, capsys):
+    pkg = tmp_path / "src" / "repro" / "core"
+    pkg.mkdir(parents=True)
+    (pkg / "engine.py").write_text(JX001_BAD)
+    monkeypatch.chdir(tmp_path)
+    assert lint_main(["src"]) == 1
+    out = capsys.readouterr().out
+    assert "JX001" in out
+    # Baselining the finding makes the run green; a stale extra entry
+    # fails it again (strict diff in both directions).
+    code = lint_main(["src", "--json"])
+    data = json.loads(capsys.readouterr().out)
+    assert code == 1 and data["new"]
+    entries = [dict(f, justification="known") for f in data["new"]]
+    for e in entries:
+        e.pop("line"), e.pop("col")
+    base = tmp_path / "reprolint_baseline.json"
+    base.write_text(json.dumps({"findings": entries}))
+    assert lint_main(["src"]) == 0
+    entries.append(dict(entries[0], message="no longer fires",
+                        justification="stale"))
+    base.write_text(json.dumps({"findings": entries}))
+    assert lint_main(["src"]) == 1
+    assert lint_main(["missing_dir"]) == 2
+
+
+def test_rule_catalog_is_complete():
+    ids = [r[0] for r in rule_catalog()]
+    assert ids == ["JX001", "JX002", "JX003", "JX004", "JX005"]
+    assert all(title and regression for _, title, regression in
+               rule_catalog())
+
+
+def test_repo_lints_clean_against_committed_baseline():
+    """The acceptance gate, as a tier-1 test: the repo's own sources give
+    zero diff against the committed baseline."""
+    findings = lint_paths(["src", "tests"], root=str(REPO))
+    baseline = Baseline.load(str(REPO / "reprolint_baseline.json"))
+    new, stale = diff_baseline(findings, baseline)
+    assert not new, [f.format() for f in new]
+    assert not stale, stale
+
+
+# ---------------------------------------------------------------------------
+# retrace_guard: unit behavior
+# ---------------------------------------------------------------------------
+def test_retrace_guard_counts_and_passes_on_stable_shapes():
+    f = jax.jit(lambda x: x * 2)
+    with retrace_guard(f=f) as g:
+        f(jnp.ones((4,)))
+        f(jnp.zeros((4,)))  # same signature: no new trace
+    assert g.counts() == {"f": 1}
+
+
+def test_retrace_guard_raises_on_shape_driven_retrace():
+    f = jax.jit(lambda x: x * 2)
+    with pytest.raises(RetraceError, match="f: 2 traces"):
+        with retrace_guard(f=f):
+            f(jnp.ones((4,)))
+            f(jnp.ones((5,)))  # second signature: retrace
+
+
+def test_retrace_guard_max_traces_and_preexisting_cache():
+    f = jax.jit(lambda x: x + 1)
+    f(jnp.ones((2,)))  # traced before the guard: not counted
+    with retrace_guard(max_traces=2, f=f) as g:
+        f(jnp.ones((3,)))
+        f(jnp.ones((4,)))
+    assert g.counts() == {"f": 2}
+
+
+def test_retrace_guard_rejects_unjitted_and_propagates_errors():
+    with pytest.raises(TypeError, match="jitted"):
+        retrace_guard(f=lambda x: x)
+    # An exception inside the region is not masked by the exit check.
+    f = jax.jit(lambda x: x)
+    with pytest.raises(KeyError):
+        with retrace_guard(f=f):
+            f(jnp.ones((1,)))
+            f(jnp.ones((2,)))
+            raise KeyError("boom")
+
+
+# ---------------------------------------------------------------------------
+# retrace_guard: the serving hot path traces each graph exactly once
+# ---------------------------------------------------------------------------
+def _tiny_lm():
+    from repro.configs import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(
+        get_reduced("llama3-8b"), vocab_size=64, num_layers=1,
+        d_model=32, num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+    )
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_serving_poll_traces_each_graph_once(paged):
+    """Ragged-arrival drain (R = 3B) through submit/poll/drain: the jitted
+    admit / evict / run_segment / result graphs each compile exactly ONE
+    signature.  A variable-shape admission batch would retrace per distinct
+    row count — the PR 8 regression this test makes permanently red."""
+    from repro.core import SearchSpec
+    from repro.serving import SearchService
+
+    cfg, params = _tiny_lm()
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", batch=2, num_simulations=6,
+        wave_size=2, max_depth=3, max_sim_steps=3, max_width=4, gamma=1.0,
+    )
+    svc = SearchService(
+        cfg, params, spec, top_k=4, max_len=12, eos_token=1,
+        paged=paged, block_size=4, ticks_per_round=4,
+    )
+    svc._ensure_engine()
+    prompts = [[3, 5], [2, 9, 4], [7], [1, 2, 3], [5, 5], [6]]
+    with retrace_guard(
+        admit=svc._admit_fn, evict=svc._evict_fn,
+        segment=svc._segment, result=svc._result_fn,
+    ) as g:
+        rows = svc.serve(prompts)
+    # Every graph was exercised (not just never called) and traced once.
+    assert g.counts() == {"admit": 1, "evict": 1, "segment": 1, "result": 1}
+    assert len(rows) == len(prompts)
+    assert svc.stats.completed == len(prompts)

@@ -28,14 +28,20 @@ ARCHS = list_archs()
 
 
 def _batch(cfg, key, b=2, s=24):
-    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    # One fold_in-derived key per consumer: reusing `key` across randint and
+    # normal correlates the token and embedding streams (JX003).
+    batch = {"tokens": jax.random.randint(
+        jax.random.fold_in(key, 0), (b, s), 0, cfg.vocab_size
+    )}
     if cfg.family == "vlm":
         batch["patch_embeds"] = jax.random.normal(
-            key, (b, cfg.num_patches, cfg.d_model), jnp.float32
+            jax.random.fold_in(key, 1), (b, cfg.num_patches, cfg.d_model),
+            jnp.float32,
         )
     if cfg.family == "encdec":
         batch["frame_embeds"] = jax.random.normal(
-            key, (b, cfg.encoder_seq, cfg.d_model), jnp.float32
+            jax.random.fold_in(key, 1), (b, cfg.encoder_seq, cfg.d_model),
+            jnp.float32,
         )
     return batch
 

@@ -22,7 +22,10 @@ from repro.envs.tap_game import EMPTY, _flood_fill, _gravity
 )
 def test_flood_fill_is_connected_same_color(seed, g, colors):
     key = jax.random.PRNGKey(seed)
-    grid = jax.random.randint(key, (g, g), 0, colors, jnp.int8)
+    # key is a parent only: every consumer gets its own fold_in-derived key
+    # (consuming key directly AND folding from it correlates the streams).
+    grid = jax.random.randint(jax.random.fold_in(key, 0), (g, g), 0, colors,
+                              jnp.int8)
     r, c = int(jax.random.randint(jax.random.fold_in(key, 1), (), 0, g)), int(
         jax.random.randint(jax.random.fold_in(key, 2), (), 0, g)
     )
@@ -51,7 +54,9 @@ def test_flood_fill_is_connected_same_color(seed, g, colors):
 def test_gravity_no_floating_cells_and_conserves(seed):
     key = jax.random.PRNGKey(seed)
     g = 6
-    grid = jax.random.randint(key, (g, g), 0, 4, jnp.int8)
+    # key is a parent only — both consumers use fold_in-derived keys.
+    grid = jax.random.randint(jax.random.fold_in(key, 0), (g, g), 0, 4,
+                              jnp.int8)
     holes = jax.random.uniform(jax.random.fold_in(key, 1), (g, g)) < 0.4
     grid = jnp.where(holes, EMPTY, grid)
     out = np.asarray(_gravity(grid))
