@@ -29,15 +29,17 @@ Two claims under test:
   width ``A`` against a MATCHED cached baseline (same env top-K / tree
   width) and report the absorbed refill hits from the trace counter.
 
-* Continuous batching (this PR): a ragged-arrival request workload with
+* Continuous batching: a ragged-arrival request workload with
   ``R >> B`` drains through the persistent
   :class:`~repro.serving.SearchService` engine — settled tree rows are
   re-seeded with queued requests mid-``while_loop`` instead of idling until
   the batch's slowest search finishes.  The ``serving_eval`` rows report
-  requests/s and the measured slot-idle fraction (the quantity slot-level
-  admission minimizes); the ``serving_speedup`` rows compare against the
-  one-shot path serving the same workload in sequential ``B``-sized
-  batches.
+  the host-paced poll path (requests/s, slot-idle fraction, host rounds);
+  the ``serving_fused`` rows report the device-resident ring path
+  (admission/eviction inside the jitted segment — one host sync per
+  segment) with its host-round reduction and mean ring occupancy; the
+  ``serving_speedup`` rows compare the fused drain against the one-shot
+  path serving the same workload in sequential ``B``-sized batches.
 
 Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` /
 ``paged_eval_d{d}_B{n}`` with derived searches/sec and per-tick µs,
@@ -45,9 +47,10 @@ Rows: ``prefill_eval_d{d}_B{n}`` / ``cached_eval_d{d}_B{n}`` /
 → max B·W at the dense layout's HBM budget),
 ``frontier_eval_d{d}_B{n}_A{a}`` / ``frontier_speedup_d{d}_B{n}_A{a}``
 (frontier vs matched-width cached decode),
-``serving_eval_{mode}_B{n}`` / ``serving_speedup_{mode}_B{n}``
-(continuous drain of ``R = 3·B`` ragged arrivals vs sequential one-shot
-batches, dense and paged), plus the PR-4
+``serving_eval_{mode}_B{n}`` / ``serving_fused_{mode}_B{n}`` /
+``serving_speedup_{mode}_B{n}``
+(continuous drain of ``R = 3·B`` ragged arrivals — host-paced poll, fused
+ring, and fused-vs-sequential-one-shot — dense and paged), plus the PR-4
 ``rollout_eval`` baseline at the first depth.  Forward/decode counting is
 asserted in ``tests/test_facade.py`` / ``tests/test_cached_evaluator.py``;
 this file measures the wall-clock consequence.  ``benchmarks/run.py`` dumps
@@ -330,20 +333,32 @@ def _serving_rows(
     """Continuous-vs-one-shot serving throughput on a ragged workload.
 
     ``R = 3 * batch`` requests with uneven prompt lengths arrive one per
-    poll round; searches settle at different ticks, so the one-shot path
-    pays an idle tail per ``B``-batch while the persistent engine admits
-    the next request into each settled row.  Reported per mode (dense /
-    paged KV): wall-clock requests/s, the measured slot-idle fraction, and
-    the speedup over serving the same workload in sequential one-shot
-    batches.
+    searches settle at different ticks, so the one-shot path pays an idle
+    tail per ``B``-batch while the persistent engine admits the next
+    request into each settled row.  All three serving variants drain the
+    same queued-up-front workload (submit all ``R``, then drain — the
+    regime the one-shot baseline also gets), so the rows differ only in
+    engine pacing, not arrival schedule.  Reported per mode (dense /
+    paged KV):
 
-    At this benchmark's toy model scale (~100 µs/tick) the host-paced
-    serving rounds (dispatch + settled-mask sync per ``ticks_per_round``
-    ticks) can cost as much as the idle ticks they reclaim, so the speedup
-    row may sit near or below 1x here; the hardware-independent signal is
-    the slot-idle fraction (what the one-shot path wastes and admission
-    reclaims), which transfers to real models where a tick costs
-    milliseconds and the same host overhead is noise.
+    * ``serving_eval`` — the host-paced poll path (PR 8 behaviour,
+      ``fused=False``): requests/s, slot-idle fraction, and its
+      ``host_rounds`` (one dispatch + settled-mask sync per
+      ``ticks_per_round`` ticks).
+    * ``serving_fused`` — the device-resident ring path (``fused=True``,
+      ring sized to the workload): requests/s, ``host_rounds`` (one per
+      ``ticks_per_segment`` segment — admission/eviction happen inside
+      the jitted ``while_loop``), host rounds per drained request, and
+      mean ring occupancy, beside the host-paced ``host_rounds`` for the
+      reduction ratio.
+    * ``serving_speedup`` — the fused drain vs the same workload in
+      sequential one-shot ``B``-batches.
+
+    At this benchmark's toy model scale (~100 µs/tick) host round-trips
+    dominate: the fused path's win is that the host syncs once per
+    segment instead of once per poll round.  ``host_rounds_per_request``
+    is the hardware-independent signal; wall-clock speedup transfers to
+    real models where a tick costs milliseconds.
     """
     import time as _time
 
@@ -362,22 +377,49 @@ def _serving_rows(
     keys = [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(n_req)]
     out = []
     for mode in ("dense", "paged"):
+        # Host-paced poll path (PR 8 behaviour): one dispatch + settled
+        # sync per ticks_per_round ticks.
         svc = SearchService(
             cfg, params, spec, top_k=top_k, max_len=max_len, eos_token=1,
-            paged=(mode == "paged"), block_size=BLOCK_SIZE,
+            paged=(mode == "paged"), block_size=BLOCK_SIZE, fused=False,
         )
-        # Warm the compiled segment/admit/evict/result programs so the
-        # timed drain measures steady-state serving, not compilation.
-        svc.serve(prompts[:batch], keys=keys[:batch])
-        st0 = dataclasses.replace(svc.stats)
-        t0 = _time.perf_counter()
-        results = svc.serve(prompts, keys=keys)
-        t_cont = _time.perf_counter() - t0
-        st = svc.stats
+
+        def timed_drain(service):
+            # Warm the compiled stage/segment/admit/evict/result programs
+            # so the timed drain measures steady-state serving, not
+            # compilation, then drain the full queued-up-front workload.
+            for i in range(batch):
+                service.submit(prompts[i], key=keys[i])
+            service.drain()
+            st0 = dataclasses.replace(service.stats)
+            t0 = _time.perf_counter()
+            for i in range(n_req):
+                service.submit(prompts[i], key=keys[i])
+            res = service.drain()
+            dt = _time.perf_counter() - t0
+            assert len(res) >= n_req
+            return dt, st0, service.stats
+
+        t_cont, st0, st = timed_drain(svc)
         ticks = st.ticks - st0.ticks
         busy = st.busy_tree_ticks - st0.busy_tree_ticks
         idle_frac = 1.0 - busy / max(ticks * batch, 1)
-        assert len(results) == n_req
+        host_rounds_poll = st.host_rounds - st0.host_rounds
+
+        # Fused device-resident ring path: admission/eviction inside the
+        # jitted segment, one host sync per segment.  Ring sized to the
+        # workload so the whole queue stages before the first segment.
+        fsvc = SearchService(
+            cfg, params, spec, top_k=top_k, max_len=max_len, eos_token=1,
+            paged=(mode == "paged"), block_size=BLOCK_SIZE, fused=True,
+            ring_capacity=n_req, ticks_per_segment=256,
+        )
+        t_fused, fst0, fst = timed_drain(fsvc)
+        host_rounds_fused = fst.host_rounds - fst0.host_rounds
+        ring_occ = (
+            (fst.ring_occupancy_sum - fst0.ring_occupancy_sum)
+            / max(host_rounds_fused, 1)
+        )
 
         # One-shot baseline: the same workload in sequential B-batches,
         # each blocking on its slowest search (same compiled program as
@@ -404,20 +446,43 @@ def _serving_rows(
                 "slot_idle_frac": idle_frac,
                 "admissions": st.admissions - st0.admissions,
                 "ticks": ticks,
+                "host_rounds": host_rounds_poll,
+            })
+            records.append({
+                "name": f"serving_fused_{mode}_B{batch}",
+                "kind": "serving_fused", "batch": batch, "depth": depth,
+                "requests": n_req, "seconds": t_fused,
+                "requests_per_sec": n_req / t_fused,
+                "host_rounds": host_rounds_fused,
+                "host_rounds_per_request": host_rounds_fused / n_req,
+                "ring_occupancy": ring_occ,
+                "host_paced_host_rounds": host_rounds_poll,
+                "host_rounds_reduction": (
+                    host_rounds_poll / max(host_rounds_fused, 1)
+                ),
             })
             records.append({
                 "name": f"serving_speedup_{mode}_B{batch}",
                 "kind": "serving_speedup", "batch": batch, "depth": depth,
-                "requests": n_req, "speedup": t_seq / t_cont,
+                "requests": n_req, "speedup": t_seq / t_fused,
                 "sequential_seconds": t_seq,
+                "fused_seconds": t_fused,
+                "host_paced_seconds": t_cont,
             })
         out.append(row(
             f"serving_eval_{mode}_B{batch}", t_cont,
-            f"{n_req / t_cont:.2f} req/s; {idle_frac:.3f} slot-idle frac",
+            f"{n_req / t_cont:.2f} req/s; {idle_frac:.3f} slot-idle frac; "
+            f"{host_rounds_poll} host rounds",
+        ))
+        out.append(row(
+            f"serving_fused_{mode}_B{batch}", t_fused,
+            f"{n_req / t_fused:.2f} req/s; {host_rounds_fused} host rounds "
+            f"({host_rounds_poll / max(host_rounds_fused, 1):.1f}x fewer); "
+            f"ring occ {ring_occ:.2f}",
         ))
         out.append(row(
             f"serving_speedup_{mode}_B{batch}", 0.0,
-            f"{t_seq / t_cont:.2f}x vs sequential one-shot batches",
+            f"{t_seq / t_fused:.2f}x vs sequential one-shot batches",
         ))
     return out
 

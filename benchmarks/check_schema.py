@@ -43,9 +43,16 @@ REQUIRED_FIELDS: dict[str, set[str]] = {
     "frontier_speedup": {"top_k", "speedup", "cached_seconds"},
     "serving_eval": {
         "requests", "batch", "requests_per_sec", "slot_idle_frac",
-        "admissions", "ticks",
+        "admissions", "ticks", "host_rounds",
     },
-    "serving_speedup": {"requests", "speedup", "sequential_seconds"},
+    "serving_fused": {
+        "requests", "requests_per_sec", "host_rounds",
+        "host_rounds_per_request", "ring_occupancy",
+        "host_paced_host_rounds", "host_rounds_reduction",
+    },
+    "serving_speedup": {
+        "requests", "speedup", "sequential_seconds", "fused_seconds",
+    },
 }
 
 

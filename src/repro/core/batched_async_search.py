@@ -82,6 +82,48 @@ class _BatchedAsyncSlots(NamedTuple):
     steps: jax.Array         # i32[B, W]  simulation steps taken
 
 
+class RequestRing(NamedTuple):
+    """Device-resident staging buffer of pre-prefilled requests.
+
+    A fixed-capacity circular queue the host fills *between* jitted
+    segments (:meth:`BatchedAsyncEngine.stage`) and the fused serving loop
+    drains *inside* the ``while_loop`` (:meth:`BatchedAsyncEngine
+    .serve_segment`): when a tree settles mid-segment, its row is re-seeded
+    from the ring head without returning to Python.  ``aux`` holds the
+    evaluator's staged per-request resources (dense: prefilled KV rows +
+    root logits; paged: a page table whose pool pages are already written
+    and held at refcount 1 by the ring).
+    """
+
+    req_id: jax.Array   # i32[C]   host-assigned id, -1 = empty slot
+    states: Pytree      # pytree[C, ...] root env states
+    rng: jax.Array      # u32[C, K] canonical per-request RNG lanes
+    head: jax.Array     # i32[]    index of the oldest staged request
+    count: jax.Array    # i32[]    staged-but-not-admitted requests
+    aux: Pytree         # evaluator ring staging (see init_ring_aux)
+
+
+class Completions(NamedTuple):
+    """Device-side completion buffer one :meth:`serve_segment` fills.
+
+    ``count`` rows are valid; each is the :class:`SearchResult` snapshot of
+    one request taken at the tick its tree settled, tagged with the
+    ``req_id`` the host staged it under.  Capacity is ``B + ring_capacity``
+    — everything in flight plus everything staged can complete within one
+    segment, so a segment can never overflow its own buffer.
+    """
+
+    req_id: jax.Array      # i32[C_out]
+    action: jax.Array      # i32[C_out]
+    root_n: jax.Array      # f32[C_out, A]
+    root_v: jax.Array      # f32[C_out, A]
+    tree_size: jax.Array   # i32[C_out]
+    max_o: jax.Array       # f32[C_out]
+    overflowed: jax.Array  # bool[C_out]
+    ticks: jax.Array       # i32[C_out]
+    count: jax.Array       # i32[]
+
+
 def _freeze_done(alive: jax.Array, new: Pytree, old: Pytree) -> Pytree:
     """Per-tree carry select — the masking ``vmap`` applies to a batched
     ``while_loop`` body, done by hand.  Every leaf leads with ``[B]``."""
@@ -502,6 +544,200 @@ class BatchedAsyncEngine:
             overflowed=tree.overflowed,
             ticks=carry[5],
         )
+
+    # ------------------------------------------------------------------
+    # Device-resident serving ring (the fused poll round)
+    # ------------------------------------------------------------------
+    def init_ring(self, proto_root_states, capacity: int) -> RequestRing:
+        """Empty :class:`RequestRing` with room for ``capacity`` requests.
+
+        ``proto_root_states`` (leaves leading with any batch axis) supplies
+        only shapes/dtypes for the per-request root-state buffers.
+        """
+        cap = int(capacity)
+        if cap < 1:
+            raise ValueError(f"ring capacity must be >= 1, got {capacity}")
+        states = jax.tree.map(
+            lambda x: jnp.zeros(
+                (cap,) + jnp.shape(jnp.asarray(x))[1:], jnp.asarray(x).dtype
+            ),
+            proto_root_states,
+        )
+        kd = jax.random.key_data(jax.random.PRNGKey(0))
+        return RequestRing(
+            req_id=jnp.full((cap,), -1, jnp.int32),
+            states=states,
+            rng=jnp.zeros((cap,) + kd.shape, kd.dtype),
+            head=jnp.int32(0),
+            count=jnp.int32(0),
+            aux=self.evaluator.init_ring_aux(self.cfg, proto_root_states, cap),
+        )
+
+    def stage(self, carry, ring: RequestRing, root_states, rngs, req_ids):
+        """Stage ``R`` requests at the ring tail (host-side, between
+        segments; the serving layer calls it with ``R == 1`` so the jitted
+        graph keeps one fixed shape).
+
+        The evaluator's ``stage_ring_aux`` pre-prefills the requests into
+        the ring's staging buffers — paged evaluators allocate their pool
+        pages *now*, from the live carry refcounts (held at refcount 1 by
+        the ring until admission), which is why the carry is threaded
+        through.  The caller must guarantee ``count + R <= capacity``.
+        """
+        cap = ring.req_id.shape[0]
+        req_ids = jnp.asarray(req_ids, jnp.int32)
+        r = req_ids.shape[0]
+        slots = (ring.head + ring.count + jnp.arange(r, dtype=jnp.int32)) % cap
+        states = jax.tree.map(
+            lambda buf, x: buf.at[slots].set(x), ring.states, root_states
+        )
+        aux, ring_aux = self.evaluator.stage_ring_aux(
+            self.cfg, carry[7], ring.aux, slots, root_states
+        )
+        ring = ring._replace(
+            req_id=ring.req_id.at[slots].set(req_ids),
+            states=states,
+            rng=ring.rng.at[slots].set(_canonical_keys(rngs)),
+            count=ring.count + r,
+            aux=ring_aux,
+        )
+        return carry[:7] + (aux,) + carry[8:], ring
+
+    def _admit_from_ring(self, carry, ring: RequestRing, row_req, slot, mask):
+        """Re-seed rows where ``mask`` holds from ring slots ``slot`` — the
+        traceable counterpart of :meth:`admit` (masked select instead of
+        scatter, evaluator splice via ``admit_aux_from_ring``)."""
+        tree, slots_, rng, t_launch, t_done, ticks, max_o, aux, fr_hits = carry
+        roots = jax.tree.map(lambda x: x[slot], ring.states)
+        tree = _freeze_done(
+            mask,
+            init_batched_tree(roots, self.capacity, self.env.num_actions),
+            tree,
+        )
+        slots_ = _freeze_done(mask, self._slot_rows0(roots, self.B), slots_)
+        zero = jnp.zeros((self.B,), jnp.int32)
+        aux, ring_aux = self.evaluator.admit_aux_from_ring(
+            self.cfg, aux, ring.aux, slot, mask, self.W
+        )
+        carry = (
+            tree, slots_,
+            jnp.where(mask[:, None], ring.rng[slot], rng),
+            jnp.where(mask, zero, t_launch),
+            jnp.where(mask, zero, t_done),
+            jnp.where(mask, zero, ticks),
+            jnp.where(mask, 0.0, max_o),
+            aux,
+            jnp.where(mask, zero, fr_hits),
+        )
+        row_req = jnp.where(mask, ring.req_id[slot], row_req)
+        return carry, ring._replace(aux=ring_aux), row_req
+
+    def _serve_round(self, carry, ring: RequestRing, row_req, comp):
+        """One in-loop harvest + admit round (traceable).
+
+        Settled rows holding a request (``row_req >= 0``) append their
+        :meth:`result` snapshot to the completion buffer and release their
+        evaluator resources (``evict_aux_to_ring``); then as many settled
+        rows as the ring holds requests are re-seeded from the ring head in
+        row order, and the ring pointers advance.
+        """
+        cap = ring.req_id.shape[0]
+        ccap = comp.req_id.shape[0]
+        settled = self.settled(carry)
+
+        done = settled & (row_req >= 0)
+        rank = jnp.cumsum(done.astype(jnp.int32)) - 1
+        dst = jnp.where(done, comp.count + rank, ccap)
+        res = self.result(carry)
+        comp = Completions(
+            req_id=comp.req_id.at[dst].set(row_req, mode="drop"),
+            action=comp.action.at[dst].set(res.action, mode="drop"),
+            root_n=comp.root_n.at[dst].set(res.root_n, mode="drop"),
+            root_v=comp.root_v.at[dst].set(res.root_v, mode="drop"),
+            tree_size=comp.tree_size.at[dst].set(res.tree_size, mode="drop"),
+            max_o=comp.max_o.at[dst].set(res.max_o, mode="drop"),
+            overflowed=comp.overflowed.at[dst].set(
+                res.overflowed, mode="drop"
+            ),
+            ticks=comp.ticks.at[dst].set(res.ticks, mode="drop"),
+            count=comp.count + jnp.sum(done.astype(jnp.int32)),
+        )
+        aux = self.evaluator.evict_aux_to_ring(carry[7], done, self.W)
+        carry = carry[:7] + (aux,) + carry[8:]
+        row_req = jnp.where(done, -1, row_req)
+
+        take = jnp.cumsum(settled.astype(jnp.int32)) - 1
+        do_admit = settled & (take < ring.count)
+        slot = (ring.head + jnp.clip(take, 0, cap - 1)) % cap
+        carry, ring, row_req = self._admit_from_ring(
+            carry, ring, row_req, slot, do_admit
+        )
+        n_adm = jnp.sum(do_admit.astype(jnp.int32))
+        ring = ring._replace(
+            head=(ring.head + n_adm) % cap, count=ring.count - n_adm
+        )
+        return carry, ring, row_req, comp
+
+    def serve_segment(self, carry, ring: RequestRing, row_req, num_ticks: int):
+        """Up to ``num_ticks`` master ticks with harvest + ring admission
+        *inside* the loop — the fused poll round.
+
+        ``row_req`` is ``i32[B]``, the request id each row is serving
+        (``-1`` = idle).  Each iteration first runs a harvest/admit round
+        (gated behind a ``cond`` so tick cost is untouched while nothing is
+        settled), then one frozen-masked master tick.  A final round after
+        the loop harvests rows that settled on the last tick.  Exits early
+        when every row is idle and the ring is empty.  Returns
+        ``(carry, ring, row_req, completions, ticks_run, busy_tree_ticks)``.
+        """
+        ccap = self.B + ring.req_id.shape[0]
+        proto = self.result(carry)
+
+        def buf(x):
+            return jnp.zeros((ccap,) + x.shape[1:], x.dtype)
+
+        comp = Completions(
+            req_id=jnp.full((ccap,), -1, jnp.int32),
+            action=buf(proto.action), root_n=buf(proto.root_n),
+            root_v=buf(proto.root_v), tree_size=buf(proto.tree_size),
+            max_o=buf(proto.max_o), overflowed=buf(proto.overflowed),
+            ticks=buf(proto.ticks), count=jnp.int32(0),
+        )
+
+        def maybe_round(carry, ring, row_req, comp):
+            settled = self.settled(carry)
+            want = jnp.any(settled & (row_req >= 0)) | (
+                (ring.count > 0) & jnp.any(settled)
+            )
+            return jax.lax.cond(
+                want,
+                self._serve_round,
+                lambda c, g, q, m: (c, g, q, m),
+                carry, ring, row_req, comp,
+            )
+
+        def cond(c):
+            carry, ring, row_req, _, t, _ = c
+            more = jnp.any(self.alive(carry)) | (ring.count > 0)
+            return (t < num_ticks) & more
+
+        def body(c):
+            carry, ring, row_req, comp, t, busy = c
+            carry, ring, row_req, comp = maybe_round(
+                carry, ring, row_req, comp
+            )
+            busy = busy + jnp.sum(self.alive(carry).astype(jnp.int32))
+            return self.step(carry), ring, row_req, comp, t + 1, busy
+
+        carry, ring, row_req, comp, t, busy = jax.lax.while_loop(
+            cond, body,
+            (carry, ring, row_req, comp, jnp.int32(0), jnp.int32(0)),
+        )
+        # Harvest rows that settled on the loop's last tick without paying
+        # a masked tick for them (admission here also primes the next
+        # segment's first tick).
+        carry, ring, row_req, comp = maybe_round(carry, ring, row_req, comp)
+        return carry, ring, row_req, comp, t, busy
 
     # ------------------------------------------------------------------
     # One-shot runs (the pre-existing API)

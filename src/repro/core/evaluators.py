@@ -168,6 +168,53 @@ class Evaluator:
         del rows, w
         return aux
 
+    # -- device-resident serving ring (traceable admit/evict variants) --
+    def init_ring_aux(self, cfg, proto_root_states, capacity: int) -> Pytree:
+        """Empty per-request staging buffers for a ``capacity``-slot ring.
+
+        The fused serving loop (``BatchedAsyncEngine.serve_segment``) admits
+        requests *inside* the jitted ``while_loop``; anything the eager
+        ``admit_aux`` would compute per admission (prefilled KV, root
+        logits, a page table) must instead be staged here ahead of time by
+        :meth:`stage_ring_aux`.  Evaluators without per-request resources
+        stage nothing.
+        """
+        del cfg, proto_root_states, capacity
+        return ()
+
+    def stage_ring_aux(self, cfg, aux, ring_aux, slots, root_states):
+        """Pre-compute ring slots ``slots``'s admission resources.
+
+        Runs at an eager boundary (host staging between segments) but must
+        be traceable with fixed shapes — the serving layer jits it once per
+        request shape.  Returns ``(aux, ring_aux)``: paged evaluators
+        allocate pool pages from the live ``aux`` refcounts (the ring holds
+        them at refcount 1 until admission), so the slot aux is threaded
+        through.
+        """
+        del cfg, slots, root_states
+        return aux, ring_aux
+
+    def admit_aux_from_ring(self, cfg, aux, ring_aux, slot, mask, w):
+        """Traceable twin of :meth:`admit_aux`: splice staged ring slots
+        ``slot`` (``i32[B]``) into the rows where ``mask`` (``bool[B]``)
+        holds — a masked select over pre-staged buffers instead of a fresh
+        prefill, so it runs *inside* the fused serving ``while_loop``.
+        Returns ``(aux, ring_aux)`` — consumed ring slots are cleared so a
+        later re-staging never double-frees their resources.
+        """
+        del cfg, slot, mask, w
+        return aux, ring_aux
+
+    def evict_aux_to_ring(self, aux, mask, w):
+        """Traceable twin of :meth:`evict_aux` over a row *mask* instead of
+        row indices: release evaluator resources of every tree row where
+        ``mask`` (``bool[B]``) holds.  Must never raise under trace — paged
+        implementations latch ``oom`` instead.
+        """
+        del mask, w
+        return aux
+
     def aux_len(self, aux) -> Optional[jax.Array]:
         del aux
         return None
@@ -751,6 +798,91 @@ class CachedModelEvaluator(ModelEvaluator):
             }
         return out
 
+    def init_ring_aux(self, cfg, proto_root_states, capacity: int):
+        """Per-request KV staging rows for the device-resident serving ring:
+        one prefilled cache row + root logits per staged request, spliced to
+        all ``w`` sibling slots at in-loop admission."""
+        del cfg
+        from ..models import init_cache
+
+        c = int(capacity)
+        s_max = int(jnp.shape(proto_root_states.tokens)[-1])
+        ring = {
+            "tokens": jnp.zeros((c, s_max), jnp.int32),
+            "len": jnp.zeros((c,), jnp.int32),
+            "pol": (), "rew": (),
+        }
+        for key, _, mcfg in self._branches():
+            cache = init_cache(mcfg, c, s_max)
+            cache.pop("len")
+            ring[key] = {
+                "cache": cache,
+                "logits": jnp.zeros((c, mcfg.vocab_size), jnp.float32),
+            }
+        return ring
+
+    def stage_ring_aux(self, cfg, aux, ring_aux, slots, root_states):
+        """Prefill the staged requests NOW (host-paced, between segments) so
+        in-loop admission is a pure gather — the dense half of ``admit_aux``
+        split at the prefill/splice boundary."""
+        del cfg
+        from ..models import init_cache
+
+        tokens = jnp.asarray(root_states.tokens, jnp.int32)
+        lengths = jnp.asarray(root_states.length, jnp.int32)
+        r = tokens.shape[0]
+        s_max = ring_aux["tokens"].shape[-1]
+        out = dict(
+            ring_aux,
+            tokens=ring_aux["tokens"].at[slots].set(tokens),
+            len=ring_aux["len"].at[slots].set(lengths),
+        )
+        for key, params, mcfg in self._branches():
+            rb = ring_aux[key]
+            logits, cache = self.prefill_fn(
+                params, mcfg, tokens, lengths, init_cache(mcfg, r, s_max)
+            )
+            cache.pop("len")
+            out[key] = {
+                "cache": jax.tree.map(
+                    lambda b, x: b.at[:, slots].set(x), rb["cache"], cache
+                ),
+                "logits": rb["logits"].at[slots].set(logits),
+            }
+        return aux, out
+
+    def admit_aux_from_ring(self, cfg, aux, ring_aux, slot, mask, w):
+        """In-loop admission splice: gather the staged ring rows into the
+        admitted rows' ``w`` sibling slots with a masked select (the
+        traceable twin of ``admit_aux``'s scatter)."""
+        del cfg
+        src = jnp.repeat(slot, w)
+        fm = jnp.repeat(mask, w)
+        out = dict(
+            aux,
+            tokens=jnp.where(
+                fm[:, None], ring_aux["tokens"][src], aux["tokens"]
+            ),
+            len=jnp.where(fm, ring_aux["len"][src], aux["len"]),
+        )
+        for key, _, _ in self._branches():
+            b, rb = aux[key], ring_aux[key]
+            cache = jax.tree.map(
+                lambda cur, stg: jnp.where(
+                    fm.reshape((1, -1) + (1,) * (cur.ndim - 2)),
+                    stg[:, src],
+                    cur,
+                ),
+                b["cache"], rb["cache"],
+            )
+            out[key] = {
+                "cache": cache,
+                "logits": jnp.where(
+                    fm[:, None], rb["logits"][src], b["logits"]
+                ),
+            }
+        return out, ring_aux
+
     def _catch_up(self, sub, target, r, s_max):
         """Re-decode each row's divergent suffix in batched ragged chunks.
 
@@ -1250,6 +1382,149 @@ class PagedCachedModelEvaluator(CachedModelEvaluator):
             len=aux["len"].at[flat].set(0),
         )
 
+    def init_ring_aux(self, cfg, proto_root_states, capacity: int):
+        """Ring staging for the paged evaluator: tokens, a page table and
+        root logits per slot.  The KV bytes themselves are NOT staged — a
+        staged request's pages live in the shared pool already (written by
+        :meth:`stage_ring_aux`, held at refcount 1 by the ring), so in-loop
+        admission is a table splice + refcount fan-out."""
+        del cfg
+        from ..models.paged import num_pages
+
+        c = int(capacity)
+        s_max = int(jnp.shape(proto_root_states.tokens)[-1])
+        mp = num_pages(s_max, self.block_size)
+        ring = {
+            "tokens": jnp.zeros((c, s_max), jnp.int32),
+            "len": jnp.zeros((c,), jnp.int32),
+            "table": jnp.full((c, mp), self.num_blocks, jnp.int32),
+            "pol": (), "rew": (),
+        }
+        for key, _, mcfg in self._branches():
+            ring[key] = {
+                "logits": jnp.zeros((c, mcfg.vocab_size), jnp.float32),
+            }
+        return ring
+
+    def stage_ring_aux(self, cfg, aux, ring_aux, slots, root_states):
+        """Allocate + prefill the staged requests' pool pages now.
+
+        Pages come out of the live slot-aux refcounts (the serving layer
+        budgets against them before staging), are written by one ragged
+        prefill, and sit at refcount 1 owned by the ring until in-loop
+        admission transfers them to the admitted row.  Pool exhaustion
+        latches ``oom`` (checked eagerly by the caller after the round) —
+        this path must stay traceable.
+        """
+        del cfg
+        from ..models import alloc_blocks, init_cache
+        from ..serving.admission import splice_pool_pages
+
+        tokens = jnp.asarray(root_states.tokens, jnp.int32)
+        lengths = jnp.asarray(root_states.length, jnp.int32)
+        r = tokens.shape[0]
+        bs, p = self.block_size, self.num_blocks
+        mp = ring_aux["table"].shape[1]
+
+        # Engine invariant: ring slots outside the staged window hold
+        # nothing (cleared at admission), so no release is needed here.
+        refcount = aux["refcount"]
+        p_r = (lengths + bs - 1) // bs
+        dst = jnp.full((r, mp), p, jnp.int32)
+        oom = aux["oom"]
+        for pi in range(mp):
+            need = pi < p_r
+            blocks, refcount, n_fail = alloc_blocks(refcount, need)
+            dst = dst.at[:, pi].set(jnp.where(need & (blocks < p), blocks, p))
+            oom = oom + n_fail
+
+        out_ring = dict(
+            ring_aux,
+            tokens=ring_aux["tokens"].at[slots].set(tokens),
+            len=ring_aux["len"].at[slots].set(lengths),
+            table=ring_aux["table"].at[slots].set(dst),
+        )
+        out_aux = dict(aux, refcount=refcount, oom=oom)
+        for key, params, mcfg in self._branches():
+            b = aux[key]
+            logits, cache = self.prefill_fn(
+                params, mcfg, tokens, lengths, init_cache(mcfg, r, mp * bs)
+            )
+            kv = cache["kv"]
+            pk, pv = splice_pool_pages(b["k"], b["v"], kv["k"], kv["v"], dst)
+            out_aux[key] = dict(b, k=pk, v=pv)
+            out_ring[key] = {
+                "logits": ring_aux[key]["logits"].at[slots].set(logits),
+            }
+        return out_aux, out_ring
+
+    def admit_aux_from_ring(self, cfg, aux, ring_aux, slot, mask, w):
+        """In-loop paged admission: table splice + refcount fan-out.
+
+        Admission targets are always fully evicted rows (the fused round
+        evicts completed rows before admitting), so there is nothing to
+        release.  The ring's single page reference transfers to the first
+        sibling slot; the fan-out adds the other ``w - 1`` sharers — the
+        same prefix-sharing layout ``admit_aux`` builds eagerly.  Consumed
+        ring slots drop to the sentinel so a later re-staging of the same
+        slot never double-frees.
+        """
+        del cfg
+        src = jnp.repeat(slot, w)
+        fm = jnp.repeat(mask, w)
+        p = self.num_blocks
+        cap = ring_aux["len"].shape[0]
+        dst = ring_aux["table"][slot]                       # [B, mp]
+        sharers = jnp.where(mask[:, None] & (dst < p), dst, p)
+        refcount = aux["refcount"].at[sharers.reshape(-1)].add(
+            jnp.where((sharers < p).reshape(-1), w - 1, 0), mode="drop"
+        )
+        out = dict(
+            aux,
+            tokens=jnp.where(
+                fm[:, None], ring_aux["tokens"][src], aux["tokens"]
+            ),
+            len=jnp.where(fm, ring_aux["len"][src], aux["len"]),
+            table=jnp.where(fm[:, None], ring_aux["table"][src],
+                            aux["table"]),
+            refcount=refcount,
+        )
+        for key, _, _ in self._branches():
+            out[key] = dict(
+                aux[key],
+                logits=jnp.where(
+                    fm[:, None],
+                    ring_aux[key]["logits"][src],
+                    aux[key]["logits"],
+                ),
+            )
+        cslot = jnp.where(mask, slot, cap)                  # OOB = untouched
+        out_ring = dict(
+            ring_aux,
+            table=ring_aux["table"].at[cslot].set(p, mode="drop"),
+            len=ring_aux["len"].at[cslot].set(0, mode="drop"),
+        )
+        return out, out_ring
+
+    def evict_aux_to_ring(self, aux, mask, w):
+        """Masked traceable eviction: rows where ``mask`` holds return their
+        pages to the pool inside the fused loop (``release_pages`` with
+        ``hi = 0`` on unmasked rows is a no-op)."""
+        from ..models import release_pages
+
+        fm = jnp.repeat(mask, w)
+        bs = self.block_size
+        hi = jnp.where(fm, (aux["len"] + bs - 1) // bs, 0)
+        refcount = release_pages(
+            aux["refcount"], aux["table"], jnp.zeros_like(hi), hi
+        )
+        return dict(
+            aux,
+            refcount=refcount,
+            table=jnp.where(fm[:, None], self.num_blocks, aux["table"]),
+            len=jnp.where(fm, 0, aux["len"]),
+        )
+
     def _paged_catch_up(self, sub, target, r, s_max):
         """Chunked divergent-suffix re-decode over paged rows.
 
@@ -1507,6 +1782,36 @@ class _FrontierMixin:
         out = super().evict_aux(dict(aux, fr=()), rows, w)
         out["fr"] = dict(
             fr, valid=fr["valid"].at[_flat_slot_rows(rows, w)].set(False)
+        )
+        return out
+
+    def stage_ring_aux(self, cfg, aux, ring_aux, slots, root_states):
+        """Frontier snapshots are per-slot, not per-request — nothing to
+        stage; shield ``fr`` from the base staging path."""
+        fr = aux["fr"]
+        out_aux, out_ring = super().stage_ring_aux(
+            cfg, dict(aux, fr=()), ring_aux, slots, root_states
+        )
+        return dict(out_aux, fr=fr), out_ring
+
+    def admit_aux_from_ring(self, cfg, aux, ring_aux, slot, mask, w):
+        """In-loop admission invalidates the rows' frontier snapshots, same
+        as the eager ``admit_aux`` — masked select instead of scatter."""
+        fr = aux["fr"]
+        out, out_ring = super().admit_aux_from_ring(
+            cfg, dict(aux, fr=()), ring_aux, slot, mask, w
+        )
+        out["fr"] = dict(
+            fr, valid=jnp.where(jnp.repeat(mask, w), False, fr["valid"])
+        )
+        return out, out_ring
+
+    def evict_aux_to_ring(self, aux, mask, w):
+        fr = aux["fr"]
+        out = super().evict_aux_to_ring(dict(aux, fr=()), mask, w)
+        out = dict(out)
+        out["fr"] = dict(
+            fr, valid=jnp.where(jnp.repeat(mask, w), False, fr["valid"])
         )
         return out
 

@@ -29,6 +29,7 @@ import numpy as np
 from ..models import (
     KV_CACHE_FAMILIES,
     PagePoolExhaustedError,
+    alloc_blocks,
     decode_step,
     init_cache,
     init_paged_cache,
@@ -36,6 +37,7 @@ from ..models import (
     paged_decode_step,
     prefill,
     prefill_ragged,
+    release_pages,
 )
 from ..models.config import ModelConfig
 from .admission import (
@@ -87,15 +89,23 @@ class ServingEngine:
                 cfg, b, serve_cfg.max_len,
                 block_size=bs, num_blocks=self.num_blocks,
             )
-            # Host-side page accounting: serving slots never share blocks
-            # (independent requests), so a free-list + table is the whole
-            # allocator — no refcounts needed.
-            self._table = np.full((b, mp), self.num_blocks, np.int32)
-            self._free = list(range(self.num_blocks - 1, -1, -1))
+            # Device-side page accounting through the jitted allocator in
+            # models.paged (alloc_blocks / release_pages): serving slots
+            # never share blocks (independent requests), so every allocated
+            # block sits at refcount 1 and the refcount vector doubles as
+            # the free list.  Same allocator the batched search engine's
+            # in-loop ring admission uses — no host numpy bookkeeping.
+            self._table = jnp.full((b, mp), self.num_blocks, jnp.int32)
+            self._refcount = jnp.zeros((self.num_blocks,), jnp.int32)
             self._paged_decode = jax.jit(
                 lambda p, t, c: paged_decode_step(p, cfg, t, c)
             )
             self._splice = jax.jit(self._splice_pages)
+            self._alloc_tables = jax.jit(
+                self._alloc_tables_impl, static_argnames=("npg",)
+            )
+            self._step_prep = jax.jit(self._page_step_prep)
+            self._release_rows = jax.jit(self._release_rows_impl)
         else:
             self.cache = init_cache(cfg, b, serve_cfg.max_len)
         self.active = np.zeros(b, bool)
@@ -114,7 +124,7 @@ class ServingEngine:
 
     def blocks_in_use(self) -> int:
         """Pool blocks currently allocated (paged mode only)."""
-        return self.num_blocks - len(self._free)
+        return int(jnp.sum(self._refcount > 0))
 
     def _splice_pages(self, pool_k, pool_v, dense_k, dense_v, dst):
         """Splice a dense ragged-prefill cache into the shared pool.
@@ -126,11 +136,54 @@ class ServingEngine:
         """
         return splice_pool_pages(pool_k, pool_v, dense_k, dense_v, dst)
 
-    def _release_slot_pages(self, slot: int) -> None:
-        row = self._table[slot]
-        for blk in row[row < self.num_blocks]:
-            self._free.append(int(blk))
-        self._table[slot] = self.num_blocks
+    def _alloc_tables_impl(self, refcount, p_r, *, npg):
+        """Admission page schedule: one jitted ``alloc_blocks`` sweep per
+        page column hands each admitted prompt its first ``p_r[i]`` blocks
+        (retraces only on a new admission-batch shape, like the prefill)."""
+        r = p_r.shape[0]
+        p = self.num_blocks
+        dst = jnp.full((r, npg), p, jnp.int32)
+        fails = jnp.int32(0)
+        for pi in range(npg):
+            need = pi < p_r
+            blocks, refcount, n_fail = alloc_blocks(refcount, need)
+            dst = dst.at[:, pi].set(jnp.where(need & (blocks < p), blocks, p))
+            fails = fails + n_fail
+        return dst, refcount, fails
+
+    def _page_step_prep(self, table, refcount, lengths, active):
+        """Per-tick paged bookkeeping, fused into one jitted dispatch:
+        slots entering a fresh logical page allocate it (serving slots own
+        their pages exclusively — off > 0 writes hit the current block, no
+        COW), everyone else resolves its write target from the table.
+        Exhaustion comes back as a latched count, raised eagerly by
+        :meth:`step` alongside the token fetch."""
+        b, mp = table.shape
+        bs = self.sc.block_size
+        p = self.num_blocks
+        safe = jnp.clip(lengths, 0, self.sc.max_len - 1)
+        bi, off = safe // bs, safe % bs
+        bi = jnp.clip(bi, 0, mp - 1)
+        rows = jnp.arange(b)
+        need = active & (off == 0)
+        blocks, refcount, n_fail = alloc_blocks(refcount, need)
+        got = need & (blocks < p)
+        cur = table[rows, bi]
+        newb = jnp.where(got, blocks, cur)
+        table = table.at[rows, bi].set(newb)
+        wb = jnp.where(active, newb, p)
+        return table, refcount, wb, off, safe, n_fail
+
+    def _release_rows_impl(self, refcount, table, mask):
+        """Return every block of the masked slots to the pool (refcount 1
+        by construction, so one decref frees; sentinel entries drop out)."""
+        mp = table.shape[1]
+        hi = jnp.where(mask, mp, 0)
+        refcount = release_pages(
+            refcount, table, jnp.zeros_like(hi), hi
+        )
+        table = jnp.where(mask[:, None], self.num_blocks, table)
+        return refcount, table
 
     def add_request(self, prompt_tokens: list[int]) -> Optional[int]:
         return self.add_requests([prompt_tokens])[0]
@@ -160,7 +213,8 @@ class ServingEngine:
         if sc.paged and take:
             # Admit only what the block pool can hold right now (prompts
             # are admitted in order; the rest wait for pages to free).
-            budget, n_fit = len(self._free), 0
+            # One refcount scan is the only device sync of the admission.
+            budget, n_fit = self.num_blocks - self.blocks_in_use(), 0
             for p in prompts[:take]:
                 need = -(-len(p) // sc.block_size)
                 if need > budget:
@@ -182,22 +236,29 @@ class ServingEngine:
                 init_cache(cfg, take, s_pad),
             )
             if sc.paged:
-                # Page-table splice: allocate each prompt's pages, scatter
-                # the dense prefill blocks into the pool, point the slots'
-                # tables at them.
+                # Page-table splice: the jitted allocator hands each prompt
+                # its pages, the dense prefill blocks scatter into the pool,
+                # and the slots' table rows point at them — all device-side
+                # (the budget pre-check above guarantees the alloc cannot
+                # fail, so ``fails`` stays untouched).
                 npg = s_pad // sc.block_size
-                dst = np.full((take, npg), self.num_blocks, np.int32)
-                for i in range(take):
-                    for pi in range(-(-int(lengths[i]) // sc.block_size)):
-                        dst[i, pi] = self._free.pop()
+                p_r = jnp.asarray(
+                    [-(-int(lengths[i]) // sc.block_size)
+                     for i in range(take)],
+                    jnp.int32,
+                )
+                dst, self._refcount, _ = self._alloc_tables(
+                    self._refcount, p_r, npg=npg
+                )
                 pk, pv = self._splice(
                     self.cache["k"], self.cache["v"],
                     cache_n["kv"]["k"], cache_n["kv"]["v"],
-                    jnp.asarray(dst),
+                    dst,
                 )
                 self.cache = dict(self.cache, k=pk, v=pv)
-                for i in range(take):
-                    self._table[int(slots[i]), :npg] = dst[i]
+                self._table = self._table.at[
+                    jnp.asarray(slots), :npg
+                ].set(dst)
             else:
                 # One scatter splices all admitted slots into the engine
                 # cache (layer-stacked leaves carry the slot axis at
@@ -238,38 +299,30 @@ class ServingEngine:
         if not self.active.any():
             return {}
         tokens = jnp.asarray(self._last_tokens, jnp.int32)
+        n_fail = None
         if self.sc.paged:
-            bs = self.sc.block_size
-            safe = np.clip(self.lengths, 0, self.sc.max_len - 1)
-            bi, off = safe // bs, safe % bs
-            wb = np.full(self.active.shape, self.num_blocks, np.int32)
-            for slot in np.flatnonzero(self.active):
-                if off[slot] == 0:
-                    # Entering a fresh logical page: allocate.  Serving
-                    # slots own their pages exclusively, so off > 0 writes
-                    # go straight into the slot's current block — no COW.
-                    if not self._free:
-                        raise PagePoolExhaustedError(
-                            f"no free KV block for slot {slot} at position "
-                            f"{int(safe[slot])} "
-                            f"(num_blocks={self.num_blocks})"
-                        )
-                    self._table[slot, bi[slot]] = self._free.pop()
-                wb[slot] = self._table[slot, bi[slot]]
+            # One jitted prep dispatch does the page bookkeeping the old
+            # host loop did per slot (fresh-page allocation, write-target
+            # resolution); exhaustion comes back latched and raises below,
+            # fetched together with the tokens.
+            self._table, self._refcount, wb, off, safe, n_fail = (
+                self._step_prep(
+                    self._table, self._refcount,
+                    jnp.asarray(self.lengths, jnp.int32),
+                    jnp.asarray(self.active),
+                )
+            )
             att_len = self.lengths + self.active.astype(np.int32)
             run_cache = dict(
                 self.cache,
-                table=jnp.asarray(self._table),
+                table=self._table,
                 len=jnp.asarray(att_len, jnp.int32),
-                pos=jnp.asarray(safe, jnp.int32),
-                write_block=jnp.asarray(wb, jnp.int32),
-                write_off=jnp.asarray(off, jnp.int32),
+                pos=safe,
+                write_block=wb,
+                write_off=off,
             )
             logits, run_cache = self._paged_decode(
                 self.params, tokens, run_cache
-            )
-            self.cache = dict(
-                self.cache, k=run_cache["k"], v=run_cache["v"]
             )
         else:
             self.cache["len"] = jnp.asarray(self.lengths, jnp.int32)
@@ -278,8 +331,20 @@ class ServingEngine:
             toks = jax.random.categorical(rng, logits / self.sc.temperature)
         else:
             toks = jnp.argmax(logits, axis=-1)
+        if n_fail is not None:
+            toks, nf = jax.device_get((toks, n_fail))
+            if int(nf):
+                raise PagePoolExhaustedError(
+                    f"no free KV block for {int(nf)} active slot(s) "
+                    f"(num_blocks={self.num_blocks})"
+                )
+            # Commit the decode's pool writes only on a clean tick.
+            self.cache = dict(
+                self.cache, k=run_cache["k"], v=run_cache["v"]
+            )
         toks = np.asarray(toks, np.int32)
         emitted = {}
+        finished = np.zeros(self.active.shape, bool)
         for slot in np.flatnonzero(self.active):
             t = int(toks[slot])
             emitted[int(slot)] = t
@@ -288,8 +353,13 @@ class ServingEngine:
             self.lengths[slot] += 1
             if t == self.sc.eos_token or self.lengths[slot] >= self.sc.max_len - 1:
                 self.active[slot] = False
-                if self.sc.paged:
-                    self._release_slot_pages(int(slot))
+                finished[slot] = True
+        if self.sc.paged and finished.any():
+            # Masked jitted release: one dispatch frees every slot that
+            # finished this tick.
+            self._refcount, self._table = self._release_rows(
+                self._refcount, self._table, jnp.asarray(finished)
+            )
         return emitted
 
     def run(self, prompts: list[list[int]], max_ticks: int = 256):

@@ -28,10 +28,10 @@ Two serving shapes:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import json
 import os
 import warnings
-from collections import deque
 from pathlib import Path
 from typing import Iterable, Optional, Sequence
 
@@ -39,7 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import SearchSpec, build_searcher
+from ..core import SearchResult, SearchSpec, build_searcher
 from ..core.api import as_search_config
 from ..core.evaluators import CachedModelEvaluator, Evaluator, ModelEvaluator
 from ..envs.token_env import TokenEnvState, make_token_env
@@ -161,6 +161,13 @@ class ServeStats:
     admissions: int = 0
     ticks: int = 0
     busy_tree_ticks: int = 0
+    #: Host round-trips into the serving loop: one per :meth:`poll` on the
+    #: host-paced path, one per fused ``serve_segment`` on the ring path —
+    #: the quantity the device-resident loop exists to shrink.
+    host_rounds: int = 0
+    #: Sum over host rounds of the ring occupancy at segment dispatch
+    #: (fused path only); :attr:`ring_occupancy` is the mean.
+    ring_occupancy_sum: int = 0
 
     @property
     def slot_idle_frac(self) -> float:
@@ -168,6 +175,13 @@ class ServeStats:
         if cap == 0:
             return 0.0
         return 1.0 - self.busy_tree_ticks / cap
+
+    @property
+    def ring_occupancy(self) -> float:
+        """Mean staged requests per fused host round (0 when host-paced)."""
+        if self.host_rounds == 0:
+            return 0.0
+        return self.ring_occupancy_sum / self.host_rounds
 
 
 class SearchService:
@@ -205,6 +219,9 @@ class SearchService:
         block_size: int = 16,
         num_blocks: Optional[int] = None,
         ticks_per_round: int = 8,
+        fused: bool = True,
+        ring_capacity: Optional[int] = None,
+        ticks_per_segment: Optional[int] = None,
     ):
         if spec.batch <= 0:
             raise ValueError("SearchService needs a batched spec (batch > 0)")
@@ -219,6 +236,23 @@ class SearchService:
         self.max_len = max_len
         self.paged = paged
         self.ticks_per_round = ticks_per_round
+        self.fused = fused
+        self.ring_capacity = (
+            int(ring_capacity) if ring_capacity is not None
+            else max(1, spec.batch)
+        )
+        self.ticks_per_segment = (
+            int(ticks_per_segment) if ticks_per_segment is not None
+            else 8 * ticks_per_round
+        )
+        if self.ring_capacity < 1:
+            raise ValueError(
+                f"ring_capacity must be >= 1, got {ring_capacity}"
+            )
+        if self.ticks_per_segment < 1:
+            raise ValueError(
+                f"ticks_per_segment must be >= 1, got {ticks_per_segment}"
+            )
         # The env's prompt only seeds env.init, which the service bypasses
         # (roots are built from the request prompts directly).
         env = make_token_env(
@@ -271,11 +305,19 @@ class SearchService:
         self.stats = ServeStats(batch=spec.batch)
         self._engine = None
         self._carry = None
-        self._queue: deque = deque()       # (req_id, prompt, key)
+        # Priority-then-FIFO heap of (-priority, req_id, prompt, key):
+        # req_id is monotonic, so equal priorities pop in submission order.
+        self._queue: list = []
         self._results: dict = {}           # req_id -> per-request SearchResult
         self._row_req: list = [None] * spec.batch
         self._next_req_id = 0
         self._base_key = jax.random.PRNGKey(0)
+        # Fused-path host mirrors (exact: every device-side transition is
+        # accounted from the per-round staged/admitted/completed counts).
+        self._ring = None
+        self._row_req_dev = None
+        self._ring_free = self.ring_capacity
+        self._inflight = 0
 
     # ------------------------------------------------------------------
     # Root-state packing
@@ -384,6 +426,19 @@ class SearchService:
         # for every distinct batch size it ever saw.
         self._admit_fn = jax.jit(engine.admit)
         self._evict_fn = jax.jit(engine.evict)
+        if self.fused:
+            # Device-resident ring: stage() keeps a fixed [1] request shape
+            # per call (same single-signature discipline as admit/evict);
+            # serve_segment fuses harvest + admission into the while_loop,
+            # so the host pays ONE dispatch + ONE sync per segment.
+            self._ring = engine.init_ring(roots, self.ring_capacity)
+            self._row_req_dev = jnp.full((B,), -1, jnp.int32)
+            self._stage_fn = jax.jit(engine.stage)
+            self._serve_fn = jax.jit(
+                lambda c, g, q: engine.serve_segment(
+                    c, g, q, self.ticks_per_segment
+                )
+            )
 
     def _free_pool_blocks(self) -> Optional[int]:
         """Free blocks in the paged evaluator's pool (None when dense)."""
@@ -392,20 +447,29 @@ class SearchService:
         aux = self._carry[7]
         return int(self.evaluator.num_blocks - jnp.sum(aux["refcount"] > 0))
 
-    def submit(self, prompt: Sequence[int], key: Optional[jax.Array] = None):
+    def submit(
+        self,
+        prompt: Sequence[int],
+        key: Optional[jax.Array] = None,
+        priority: int = 0,
+    ):
         """Queue one search request; returns its request id.
 
         ``key`` seeds the request's tree row (defaults to a fold of the
-        service key and the request id).  The request runs when a row
-        settles — call :meth:`poll` to make progress or :meth:`drain` to
-        block until everything queued has finished.
+        service key and the request id).  ``priority`` orders the queue:
+        higher values admit first, ties break FIFO by submission order
+        (the pre-existing behaviour is the all-zero default).  The request
+        runs when a row settles — call :meth:`poll` to make progress or
+        :meth:`drain` to block until everything queued has finished.
         """
         validate_prompts([prompt], self.max_len)
         req_id = self._next_req_id
         self._next_req_id += 1
         if key is None:
             key = jax.random.fold_in(self._base_key, req_id)
-        self._queue.append((req_id, list(prompt), key))
+        heapq.heappush(
+            self._queue, (-int(priority), req_id, list(prompt), key)
+        )
         self.stats.submitted += 1
         return req_id
 
@@ -466,13 +530,13 @@ class SearchService:
         for b in free_rows:
             if not self._queue:
                 break
-            req_id, prompt, key = self._queue[0]
+            _, req_id, prompt, key = self._queue[0]
             if budget is not None:
                 need = pages_needed(len(prompt), self.evaluator.block_size)
                 if need > budget:
                     break  # wait for pages to free (admit in order)
                 budget -= need
-            self._queue.popleft()
+            heapq.heappop(self._queue)
             # Deliberate per-row admission dispatch (same reasoning as the
             # evict loop in _harvest): fixed [1]-shape rows keep the jitted
             # admit at one compiled signature; issubdtype is metadata-only.
@@ -493,14 +557,21 @@ class SearchService:
         return admitted
 
     def poll(self) -> dict:
-        """One serving round: harvest settled rows, admit queued requests,
-        advance the engine up to ``ticks_per_round`` master ticks.
+        """One serving round; returns the requests that finished in it
+        (``{req_id: SearchResult row}``; results also accumulate in
+        :attr:`results`).
 
-        Returns the requests that finished this round
-        (``{req_id: SearchResult row}``); results also accumulate in
-        :attr:`results`.
+        Host-paced (``fused=False``): harvest settled rows, admit queued
+        requests, advance the engine up to ``ticks_per_round`` master ticks
+        — several dispatches and syncs per round.  Fused (the default):
+        stage queued requests into the device-resident ring, dispatch ONE
+        ``serve_segment`` (up to ``ticks_per_segment`` ticks with harvest +
+        admission inside the ``while_loop``), and drain the completion
+        buffer — one host round per segment.
         """
         self._ensure_engine()
+        if self.fused:
+            return self._poll_fused()
         settled = self._settled()
         fresh = self._harvest(settled)
         # Harvest freed rows but left them settled; the same host mask
@@ -510,6 +581,69 @@ class SearchService:
             self._carry, t, busy = self._segment(self._carry)
             self.stats.ticks += int(t)
             self.stats.busy_tree_ticks += int(busy)
+        self.stats.host_rounds += 1
+        return fresh
+
+    def _poll_fused(self) -> dict:
+        """One fused round: refill the ring, run one segment, drain
+        completions.  The only device syncs are the paged pool budget (when
+        staging) and the single post-segment fetch."""
+        budget = self._free_pool_blocks()
+        while self._queue and self._ring_free > 0:
+            _, req_id, prompt, key = self._queue[0]
+            if budget is not None:
+                need = pages_needed(len(prompt), self.evaluator.block_size)
+                if need > budget:
+                    break  # wait for pages to free (admit in order)
+                budget -= need
+            heapq.heappop(self._queue)
+            # Deliberate per-request staging dispatch: a fixed [1]-shape
+            # request keeps the jitted stage at ONE compiled signature (the
+            # variable-shape alternative was PR 8's 30x regression), and
+            # the loop is bounded by the small host-side ring capacity.
+            # reprolint: disable=JX002
+            if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+                key = jax.random.key_data(key)
+            self._carry, self._ring = self._stage_fn(
+                self._carry, self._ring, self._root_rows([prompt]),
+                key[None], jnp.asarray([req_id], jnp.int32),
+            )
+            self._ring_free -= 1
+        staged = self.ring_capacity - self._ring_free
+        fresh = {}
+        if staged > 0 or self._inflight > 0:
+            out = self._serve_fn(self._carry, self._ring, self._row_req_dev)
+            self._carry, self._ring, self._row_req_dev = out[:3]
+            comp, t, busy = out[3:]
+            oom = self._carry[7]["oom"] if self.paged else 0
+            comp, t, busy, count_after, oom = jax.device_get(
+                (comp, t, busy, self._ring.count, oom)
+            )
+            if self.paged:
+                self.evaluator._maybe_raise(oom)
+            n = int(comp.count)
+            for i in range(n):
+                req_id = int(comp.req_id[i])
+                # Host-side slicing of the already-fetched completion buffer
+                # (device_get above) — no device dispatch in this loop.
+                # reprolint: disable=JX002
+                row = SearchResult(
+                    action=comp.action[i], root_n=comp.root_n[i],
+                    root_v=comp.root_v[i], tree_size=comp.tree_size[i],
+                    dup_selections=np.float32(0.0), max_o=comp.max_o[i],
+                    overflowed=comp.overflowed[i], ticks=comp.ticks[i],
+                )
+                self._results[req_id] = row
+                fresh[req_id] = row
+            admitted = staged - int(count_after)
+            self._ring_free = self.ring_capacity - int(count_after)
+            self._inflight += admitted - n
+            self.stats.admissions += admitted
+            self.stats.completed += n
+            self.stats.ticks += int(t)
+            self.stats.busy_tree_ticks += int(busy)
+        self.stats.host_rounds += 1
+        self.stats.ring_occupancy_sum += staged
         return fresh
 
     def drain(self, max_rounds: int = 100_000) -> dict:
@@ -519,15 +653,11 @@ class SearchService:
         paged pool too small for even one queued prompt)."""
         self._ensure_engine()
         for _ in range(max_rounds):
-            if not self._queue and all(r is None for r in self._row_req):
+            if not self._queue and self._in_flight() == 0:
                 break
-            before = (len(self._queue), sum(
-                r is not None for r in self._row_req
-            ), self.stats.ticks)
+            before = (len(self._queue), self._in_flight(), self.stats.ticks)
             self.poll()
-            after = (len(self._queue), sum(
-                r is not None for r in self._row_req
-            ), self.stats.ticks)
+            after = (len(self._queue), self._in_flight(), self.stats.ticks)
             if after == before:
                 raise RuntimeError(
                     f"serving made no progress (queue={after[0]}, "
@@ -536,9 +666,19 @@ class SearchService:
                 )
         else:
             raise RuntimeError(f"drain exceeded {max_rounds} rounds")
-        # One last harvest: the final segment may have settled rows.
-        self._harvest()
+        if not self.fused:
+            # One last harvest: the final segment may have settled rows.
+            # (The fused loop harvests in-loop; its completions drained in
+            # poll.)
+            self._harvest()
         return dict(self._results)
+
+    def _in_flight(self) -> int:
+        """Requests past the queue but short of a result (host-side)."""
+        if self.fused:
+            staged = self.ring_capacity - self._ring_free
+            return self._inflight + staged
+        return sum(r is not None for r in self._row_req)
 
     def serve(
         self,

@@ -453,7 +453,7 @@ def test_serving_poll_traces_each_graph_once(paged):
     )
     svc = SearchService(
         cfg, params, spec, top_k=4, max_len=12, eos_token=1,
-        paged=paged, block_size=4, ticks_per_round=4,
+        paged=paged, block_size=4, ticks_per_round=4, fused=False,
     )
     svc._ensure_engine()
     prompts = [[3, 5], [2, 9, 4], [7], [1, 2, 3], [5, 5], [6]]
@@ -466,3 +466,37 @@ def test_serving_poll_traces_each_graph_once(paged):
     assert g.counts() == {"admit": 1, "evict": 1, "segment": 1, "result": 1}
     assert len(rows) == len(prompts)
     assert svc.stats.completed == len(prompts)
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_serving_fused_traces_each_graph_once(paged):
+    """The device-resident ring path compiles exactly ONE signature per
+    graph across a ragged 6-request drain: `stage` (fixed [1] request
+    shape) and the fused `serve_segment` (harvest + ring admission inside
+    the while_loop) — host-pacing's per-row admit/evict graphs never run."""
+    from repro.core import SearchSpec
+    from repro.serving import SearchService
+
+    cfg, params = _tiny_lm()
+    spec = SearchSpec(
+        algo="wu_uct", engine="async", batch=2, num_simulations=6,
+        wave_size=2, max_depth=3, max_sim_steps=3, max_width=4, gamma=1.0,
+    )
+    svc = SearchService(
+        cfg, params, spec, top_k=4, max_len=12, eos_token=1,
+        paged=paged, block_size=4, ticks_per_round=4,
+    )
+    svc._ensure_engine()
+    prompts = [[3, 5], [2, 9, 4], [7], [1, 2, 3], [5, 5], [6]]
+    with retrace_guard(
+        stage=svc._stage_fn, segment=svc._serve_fn,
+        admit=svc._admit_fn, evict=svc._evict_fn,
+    ) as g:
+        rows = svc.serve(prompts)
+    assert g.counts() == {"stage": 1, "segment": 1, "admit": 0, "evict": 0}
+    assert len(rows) == len(prompts)
+    assert svc.stats.completed == len(prompts)
+    # One host round per segment, not one per poll — and the drain needed
+    # strictly fewer segments than requests.
+    assert svc.stats.host_rounds >= 1
+    assert svc.stats.admissions == len(prompts)

@@ -312,3 +312,97 @@ def test_trace_occupancy_counters():
     np.testing.assert_array_equal(active, alive.sum(axis=1))
     # The engine actually worked: some tick had every tree busy.
     assert busy.sum() > 0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident serving ring: the fused poll round
+# ---------------------------------------------------------------------------
+def _frontier_evaluator(tiny_lm, paged):
+    from repro.core.evaluators import (
+        FrontierModelEvaluator,
+        PagedFrontierModelEvaluator,
+    )
+
+    cfg, params = tiny_lm
+    if paged:
+        return PagedFrontierModelEvaluator(
+            cfg, params, top_k=4, eos_token=1, block_size=4, num_blocks=48,
+        )
+    return FrontierModelEvaluator(cfg, params, top_k=4, eos_token=1)
+
+
+@pytest.mark.parametrize(
+    "mode", ["dense", "paged", "frontier", "paged_frontier"]
+)
+def test_fused_ring_matches_host_paced_poll(tiny_lm, mode):
+    """Every request served through the device-resident loop is
+    bit-identical to the PR 8 host-paced poll path.
+
+    Both paths fully re-seed a row at admission (tree, RNG lane, evaluator
+    aux) and every per-row computation is row-independent, so WHEN a row
+    was admitted relative to the others must not matter — in-loop ring
+    admission included.  Dense, paged, and both frontier evaluators.
+    """
+    paged = mode in ("paged", "paged_frontier")
+    kw = {}
+    if "frontier" in mode:
+        kw["evaluator"] = _frontier_evaluator(tiny_lm, paged)
+    keys = [
+        jax.random.fold_in(jax.random.PRNGKey(11), i)
+        for i in range(len(PROMPTS))
+    ]
+    rows_fused = _service(tiny_lm, paged, fused=True, **kw).serve(
+        PROMPTS, keys=keys
+    )
+    rows_host = _service(tiny_lm, paged, fused=False, **kw).serve(
+        PROMPTS, keys=keys
+    )
+    for rf, rh in zip(rows_fused, rows_host):
+        assert int(rf.action) == int(rh.action)
+        np.testing.assert_array_equal(
+            np.asarray(rf.root_n), np.asarray(rh.root_n)
+        )
+        np.testing.assert_allclose(
+            np.asarray(rf.root_v), np.asarray(rh.root_v), atol=1e-6
+        )
+        assert int(rf.ticks) == int(rh.ticks)
+
+
+def test_ring_churn_zero_leaked_pages(tiny_lm):
+    """2x the prompt set through B=2 rows and a 3-slot ring: every pool
+    page staged by the ring or held by a slot is back (refcount zero), no
+    allocation ever failed, and every page table dropped to the sentinel."""
+    svc = _service(tiny_lm, True, ring_capacity=3)
+    prompts = PROMPTS + PROMPTS
+    rows = svc.serve(prompts)
+    assert len(rows) == len(prompts)
+    assert svc.stats.completed == len(prompts)
+    aux = svc._carry[7]
+    p = svc.evaluator.num_blocks
+    assert int(jnp.sum(aux["refcount"])) == 0
+    assert int(aux["oom"]) == 0
+    assert bool(jnp.all(aux["table"] == p))
+    assert bool(jnp.all(svc._ring.aux["table"] == p))
+    assert bool(jnp.all(svc._ring.aux["len"] == 0))
+    assert int(svc._ring.count) == 0
+    # The fused path really ran: admissions all flowed through the ring.
+    assert svc.stats.admissions == len(prompts)
+    assert svc.stats.ring_occupancy > 0.0
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "host"])
+def test_priority_orders_admission(tiny_lm, fused):
+    """submit(priority=...) admits higher priorities first, FIFO within a
+    priority class — on both the ring staging and host-paced admission
+    paths.  B=1 serializes requests, so completion order IS admission
+    order."""
+    cfg, params = tiny_lm
+    svc = SearchService(
+        cfg, params, _spec(batch=1), top_k=4, max_len=12, eos_token=1,
+        ticks_per_round=4, fused=fused,
+    )
+    for i, pri in enumerate([0, 5, 1, 5]):
+        svc.submit(PROMPTS[i], priority=pri)
+    svc.drain()
+    # ids 1 and 3 share the top priority (FIFO between them), then 2, then 0.
+    assert list(svc._results.keys()) == [1, 3, 2, 0]
